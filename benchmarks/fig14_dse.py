@@ -1,0 +1,46 @@
+"""Fig 14: design-space exploration -- ABFT threshold, offload interval,
+systolic-array size."""
+import jax.numpy as jnp
+
+from benchmarks.common import csv, quality_vs_clean, run_sampler, \
+    schedule_uniform, timer
+from repro.core import dvfs
+from repro.perfmodel import scalesim
+from repro.perfmodel.hw import PaperAccel
+
+BER = 3e-3
+
+
+def _fine(ber, n=10):
+    t = schedule_uniform(ber, n).ber_table
+    t = t.at[:2, :].set(0.0).at[:, dvfs.CLASS_EMBED].set(0.0) \
+         .at[:, dvfs.CLASS_FIRST_BLOCK].set(0.0)
+    return dvfs.DvfsSchedule(t, dvfs.UNDERVOLT, 2)
+
+
+def main():
+    print("# fig14a: ABFT threshold bit vs quality (fine-grained, BER=3e-3)")
+    for bit in [6, 8, 10, 12, 14, 18]:
+        out, _ = timer(run_sampler, "dit-xl-512", "drift",
+                       _fine(BER), 10, 5, bit)
+        csv(f"fig14a_thr{bit}", 0.0,
+            f"lpips={quality_vs_clean(out)['lpips']:.4f} "
+            f"corrected={int(out.total_corrected)}")
+    print("# fig14b: offload interval vs quality")
+    for interval in [1, 2, 5, 10, 20]:
+        out, _ = timer(run_sampler, "dit-xl-512", "drift",
+                       schedule_uniform(BER), 10, interval)
+        csv(f"fig14b_interval{interval}", 0.0,
+            f"lpips={quality_vs_clean(out)['lpips']:.4f} "
+            f"offload_traffic=1/{interval}")
+    print("# fig14c: systolic array size (ABFT overhead + utilization)")
+    for a in [16, 32, 64, 128]:
+        hw = PaperAccel(array_dim=a)
+        ovh = scalesim.abft_overhead_ratio(0, 0, 0, hw)
+        st = scalesim.gemm(1024, 1152, 1152, hw)
+        csv(f"fig14c_array{a}", 0.0,
+            f"abft_overhead={ovh:.2%} gemm_util={st.utilization:.2f}")
+
+
+if __name__ == "__main__":
+    main()

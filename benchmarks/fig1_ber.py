@@ -1,0 +1,25 @@
+"""Fig 1(a): BER across voltage/frequency operating points (model surface).
+
+Reproduces the calibrated BER(V, f) surface: anchors at the paper's
+(0.9V,2GHz)~error-free, (0.68V,2GHz)~3e-3, (0.88V,3.5GHz)~3e-3, with the
+energy/throughput factors that define the efficiency-reliability tradeoff.
+"""
+from repro.core import dvfs
+from benchmarks.common import csv
+
+
+def main():
+    print("# fig1a: voltage,freq_ghz,ber,energy_factor,speed_factor")
+    for v in [0.62, 0.65, 0.68, 0.72, 0.76, 0.80, 0.84, 0.88, 0.90]:
+        for f in [2.0, 2.5, 3.0, 3.5]:
+            op = dvfs.OperatingPoint(v, f)
+            print(f"fig1a,{v:.2f},{f:.1f},{dvfs.ber_of(op):.3e},"
+                  f"{op.energy_factor:.3f},{op.speed_factor:.3f}")
+    for name, op in [("nominal", dvfs.NOMINAL), ("undervolt", dvfs.UNDERVOLT),
+                     ("overclock", dvfs.OVERCLOCK)]:
+        csv(f"fig1a_anchor_{name}", 0.0,
+            f"ber={dvfs.ber_of(op):.2e} (paper: ~3e-3 aggressive)")
+
+
+if __name__ == "__main__":
+    main()

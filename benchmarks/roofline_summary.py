@@ -1,0 +1,36 @@
+"""Roofline summary from the dry-run artifacts (see launch/roofline.py).
+
+Prints the per-cell three-term roofline for whatever cells have completed;
+the full table lands in EXPERIMENTS.md Sec Roofline.
+"""
+import os
+
+from repro.launch import roofline
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def main():
+    if not os.path.isdir(DIR):
+        print("roofline_summary,0.0,no dryrun artifacts yet "
+              "(run python -m repro.launch.dryrun)")
+        return
+    rows = roofline.load_rows(DIR)
+    if not rows:
+        print("roofline_summary,0.0,no cells recorded yet")
+        return
+    print("# roofline: arch,shape,mesh,compute_s,memory_s,collective_s,"
+          "dominant,frac,useful")
+    for r in rows:
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+              f"{r['t_collective_s']:.3e},{r['dominant']},"
+              f"{r['roofline_fraction']:.2f},{r['useful_flops_ratio']:.2f}")
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    print(f"roofline_summary,0.0,cells={len(rows)} dominated_by={n_dom}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Table 1: generation quality + efficiency, w/ and w/o DRIFT.
+
+Quality: tiny-model fixed-seed simulation (proxy metrics; see DESIGN.md).
+Efficiency: calibrated perfmodel on the FULL configs -- the reproduction
+targets are the paper's ~36% energy saving (undervolt) and ~1.7x speedup
+(overclock) at preserved quality.
+"""
+from repro import configs
+from repro.core import dvfs
+from repro.perfmodel import energy
+
+from benchmarks.common import csv, quality_vs_clean, run_sampler, timer
+
+CONFIGS = [("dit-xl-512", 50), ("pixart-alpha", 20), ("sd15-unet", 50)]
+
+
+def main():
+    from benchmarks import common
+    common.TRAINED["use"] = True      # headline table: trained DiT if avail
+    em = energy.calibrate()
+    print("# table1: arch | clean-vs-drift quality | energy | latency")
+    saves, speeds = [], []
+    for arch, steps in CONFIGS:
+        # quality at the undervolt BER with fine-grained protection
+        sched = dvfs.fine_grained_schedule(10, dvfs.UNDERVOLT,
+                                           nominal_steps=2)
+        out, dt = timer(run_sampler, arch, "drift", sched)
+        q = quality_vs_clean(out, arch)
+        rec_tiles = float(out.total_corrected) / 10 / (32 * 32)
+
+        full = configs.get_config(arch)
+        base = energy.run_cost(full, energy.baseline_rc(steps), em=em)
+        uv = energy.run_cost(full, energy.RunConfig(
+            num_steps=steps, aggressive=dvfs.UNDERVOLT,
+            recovery_tiles_per_step=rec_tiles), em=em)
+        oc = energy.run_cost(full, energy.RunConfig(
+            num_steps=steps, aggressive=dvfs.OVERCLOCK,
+            recovery_tiles_per_step=rec_tiles), em=em)
+        save = 100 * (1 - uv["energy_j"] / base["energy_j"])
+        speed = base["latency_s"] / oc["latency_s"]
+        saves.append(save)
+        speeds.append(speed)
+        csv(f"table1_{arch}", dt * 1e6,
+            f"lpips={q['lpips']:.4f} clip={q['clip']:.4f} "
+            f"ssim={q['ssim']:.4f} "
+            f"E_base={base['energy_j']:.2f}J E_uv={uv['energy_j']:.2f}J "
+            f"(-{save:.1f}%) T_base={base['latency_s']:.3f}s "
+            f"speedup={speed:.2f}x")
+    csv("table1_average", 0.0,
+        f"energy_saving={sum(saves)/len(saves):.1f}% (paper 36%) "
+        f"speedup={sum(speeds)/len(speeds):.2f}x (paper 1.7x)")
+    common.TRAINED["use"] = False
+
+
+if __name__ == "__main__":
+    main()

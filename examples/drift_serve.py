@@ -1,0 +1,33 @@
+"""Serve a small diffusion model with batched requests under DRIFT.
+
+Thin driver over repro.launch.serve: processes a queue of generation
+requests, batching them per sampler invocation, with the undervolt
+operating point + rollback-ABFT, and reports per-batch quality/energy.
+
+    PYTHONPATH=src python examples/drift_serve.py --requests 6 --batch 2
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--op", default="undervolt")
+    args = ap.parse_args()
+    n_batches = -(-args.requests // args.batch)
+    print(f"[drift_serve] {args.requests} requests -> {n_batches} batches "
+          f"of {args.batch}")
+    for i in range(n_batches):
+        print(f"--- batch {i} ---")
+        sys.argv = ["serve", "--arch", "dit-xl-512", "--smoke",
+                    "--batch", str(args.batch), "--steps", "10",
+                    "--mode", "drift", "--op", args.op, "--seed", str(i)]
+        serve_lib.main()
+
+
+if __name__ == "__main__":
+    main()

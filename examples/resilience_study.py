@@ -1,0 +1,77 @@
+"""Resilience characterization probes (paper Sec 4) on a small DiT.
+
+    PYTHONPATH=src python examples/resilience_study.py --probe similarity
+    PYTHONPATH=src python examples/resilience_study.py --probe bits
+    PYTHONPATH=src python examples/resilience_study.py --probe steps
+    PYTHONPATH=src python examples/resilience_study.py --probe selfheal
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def probe_similarity():
+    """Fig 2(b): cosine similarity of activations across adjacent steps --
+    the property rollback-ABFT exploits."""
+    from benchmarks.common import tiny_model, sample_inputs
+    from repro.diffusion import sampler as sampler_lib, schedule as sched_lib
+    from repro.core.exec_ctx import DriftSystemConfig
+
+    cfg, params = tiny_model("dit-xl-512")
+    lat0, cond, text = sample_inputs(cfg)
+    scfg = sampler_lib.SamplerConfig(num_sample_steps=10,
+                                     drift=DriftSystemConfig(mode="clean"))
+    sched = sched_lib.DdpmSchedule.default(1000)
+    ts = sched_lib.ddim_timesteps(1000, 10)
+    from repro.models import dit as dit_lib
+    lat = lat0
+    prev_eps = None
+    print("step_pair,cos_similarity(eps)")
+    for i, t in enumerate(ts):
+        eps, _, _ = dit_lib.forward(cfg, params, lat,
+                                    jnp.full((lat.shape[0],), float(t)),
+                                    cond, text=text)
+        if prev_eps is not None:
+            num = float(jnp.sum(eps * prev_eps))
+            den = float(jnp.linalg.norm(eps) * jnp.linalg.norm(prev_eps))
+            print(f"{i-1}->{i},{num/den:.4f}")
+        prev_eps = eps
+        t_next = int(ts[i + 1]) if i + 1 < len(ts) else -1
+        lat = sched.ddim_step(lat, eps, int(t), t_next)
+
+
+def probe_bits():
+    from benchmarks import fig4_bitlevel
+    fig4_bitlevel.main()
+
+
+def probe_steps():
+    from benchmarks import fig5_timestep
+    fig5_timestep.main()
+
+
+def probe_blocks():
+    from benchmarks import fig6_block
+    fig6_block.main()
+
+
+def probe_selfheal():
+    from benchmarks import fig7_selfcorrection
+    fig7_selfcorrection.main()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probe", default="similarity",
+                    choices=["similarity", "bits", "steps", "blocks",
+                             "selfheal"])
+    args = ap.parse_args()
+    {"similarity": probe_similarity, "bits": probe_bits,
+     "steps": probe_steps, "blocks": probe_blocks,
+     "selfheal": probe_selfheal}[args.probe]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Fault-tolerant training checkpoints: atomic, verified, elastic.
+
+Framework-level fault tolerance (distinct from the paper's in-inference
+rollback-ABFT): a run on thousands of nodes must survive preemption, node
+loss, and restarts onto a *different* mesh. Design:
+
+  * **Atomic**: leaves are written to ``step_XXXX.tmp/`` then the directory
+    is os.rename'd -- a crash mid-write never corrupts the latest
+    checkpoint. A MANIFEST.json records tree structure, shapes, dtypes and
+    per-leaf SHA256.
+  * **Verified restore**: hashes are checked on load; a corrupt checkpoint
+    is skipped and the previous valid one used (restore_latest walks
+    backwards).
+  * **Elastic / reshard-on-restore**: leaves are stored unsharded
+    (gathered); ``restore`` returns host numpy arrays which the caller
+    device_puts with the *new* mesh's NamedShardings -- so restoring
+    512-chip state onto 256 chips (or onto a different DP/TP split) is the
+    default path, not a special case.
+  * **Pipeline state**: the data pipeline is a deterministic function of
+    (seed, step) (see data/synthetic.py), so checkpointing ``step`` fully
+    captures it.
+
+On a real multi-host deployment, writes go per-process for the local shards
+(Orbax-style); this single-host implementation keeps the same protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def _sha(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep_last: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+
+    # ----------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+        leaves, treedef = _flatten(tree)
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "extra": extra or {},
+            "leaves": [],
+        }
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+            manifest["leaves"].append({
+                "shape": list(leaf.shape),
+                "dtype": str(leaf.dtype),
+                "sha256": _sha(leaf),
+            })
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic publish
+        self._gc()
+        return final
+
+    # -------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _load(self, step: int, template: Any) -> Tuple[Any, Dict]:
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        _, treedef = jax.tree_util.tree_flatten(template)
+        leaves = []
+        for i, meta in enumerate(manifest["leaves"]):
+            a = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            if _sha(a) != meta["sha256"]:
+                raise IOError(f"hash mismatch in {path} leaf {i}")
+            leaves.append(a)
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+    def restore_latest(self, template: Any
+                       ) -> Optional[Tuple[int, Any, Dict]]:
+        """Walk back from the newest step until a checkpoint verifies."""
+        for step in reversed(self.steps()):
+            try:
+                tree, extra = self._load(step, template)
+                return step, tree, extra
+            except (IOError, OSError, json.JSONDecodeError) as e:
+                print(f"[ckpt] step {step} invalid ({e}); trying previous")
+        return None
+
+    def restore_resharded(self, template: Any, shardings: Any
+                          ) -> Optional[Tuple[int, Any, Dict]]:
+        """Restore + device_put onto (possibly different) mesh shardings."""
+        got = self.restore_latest(template)
+        if got is None:
+            return None
+        step, tree, extra = got
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+        return step, tree, extra
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_config(arch, smoke=False)`` by public id."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "gemma3-27b": "gemma3_27b",
+    "gemma2-9b": "gemma2_9b",
+    "olmo-1b": "olmo_1b",
+    "glm4-9b": "glm4_9b",
+    "whisper-base": "whisper_base",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "mamba2-370m": "mamba2_370m",
+    "hymba-1.5b": "hymba_1p5b",
+    "internvl2-76b": "internvl2_76b",
+    "dit-xl-512": "dit_xl_512",
+    "pixart-alpha": "pixart_alpha",
+    "sd15-unet": "sd15_unet",
+}
+
+ASSIGNED_ARCHS = tuple(list(_MODULES)[:10])
+PAPER_ARCHS = tuple(list(_MODULES)[10:])
+ALL_ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    name = arch.replace("_", "-")
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)

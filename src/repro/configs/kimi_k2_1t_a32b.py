@@ -1,0 +1,31 @@
+"""kimi-k2-1t-a32b [moe] -- 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, MoE 384 routed experts top-8 (+1 shared, per the K2 report).
+Trillion-parameter MoE (paper-table entry). [arXiv:2501.kimi2; unverified]
+
+Scale notes: ~1.04e12 total params (bf16 weights = ~2.1 TB) -> requires
+full (pod, data, model) FSDP+EP sharding at 512 chips (~4 GB/chip) and the
+Adafactor optimizer for the training cell (see configs/optim policy).
+"""
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff=2048,
+    vocab=163840, head_dim=112,
+    n_experts=384, n_shared_experts=1, top_k=8, capacity_factor=1.25,
+    attn_pattern=("global",), norm="rmsnorm", act="silu",
+    tie_embeddings=False,
+    # 1T params: bf16 weights + Adafactor (factored stats) is the only
+    # combination that fits 16 GB/chip at 512 ways (see DESIGN.md Sec 5).
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="kimi-k2-smoke", family="moe",
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_ff=32, vocab=512,
+    head_dim=8, n_experts=8, n_shared_experts=1, top_k=2,
+    capacity_factor=8.0, attn_pattern=("global",), norm="rmsnorm",
+    act="silu", tie_embeddings=False, dtype=jnp.float32,
+)

@@ -1,0 +1,20 @@
+"""sd15-unet (paper arch #3) -- Stable Diffusion v1.5 conditional UNet
+backbone: channels (320, 640, 1280), latent 64x64x4, CLIP text cond
+(77 x 768 stub embeddings). [arXiv:2112.10752]"""
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+FULL = ModelConfig(
+    name="sd15-unet", family="unet",
+    n_layers=0, d_model=1280, unet_channels=(320, 640, 1280),
+    latent_size=64, latent_channels=4,
+    cond_dim=768, cond_tokens=77,
+)
+
+SMOKE = ModelConfig(
+    name="sd15-smoke", family="unet",
+    n_layers=0, d_model=128, unet_channels=(32, 64, 96),
+    latent_size=16, latent_channels=4,
+    cond_dim=32, cond_tokens=8, dtype=jnp.float32,
+)

@@ -1,0 +1,14 @@
+"""DRIFT core: the paper's contribution as composable JAX modules."""
+from repro.core.abft import AbftConfig, AbftReport, correction_mask, detect_int, detect_f32
+from repro.core.dvfs import (NOMINAL, OVERCLOCK, UNDERVOLT, DvfsSchedule,
+                             OperatingPoint, ber_of, fine_grained_schedule,
+                             uniform_schedule)
+from repro.core.exec_ctx import DriftSystemConfig, ExecContext, clean_ctx
+from repro.core.rollback import RollbackConfig
+
+__all__ = [
+    "AbftConfig", "AbftReport", "correction_mask", "detect_int", "detect_f32",
+    "NOMINAL", "OVERCLOCK", "UNDERVOLT", "DvfsSchedule", "OperatingPoint",
+    "ber_of", "fine_grained_schedule", "uniform_schedule",
+    "DriftSystemConfig", "ExecContext", "clean_ctx", "RollbackConfig",
+]

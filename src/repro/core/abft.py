@@ -1,0 +1,204 @@
+"""Algorithm-based fault tolerance (ABFT) for GEMM, Huang & Abraham style.
+
+For C = A @ B, maintain
+    row checksum:  C @ 1  ==  A @ (B @ 1)
+    col checksum:  1T @ C ==  (1T @ A) @ B
+A mismatch in row i and column j localizes an error at (i, j) and the
+mismatch magnitude equals the (summed) error value (Fig 3 of the paper).
+
+Integer exactness
+-----------------
+For INT8xINT8->INT32 GEMMs, all checksum arithmetic is performed in int32
+*with two's-complement wraparound*, which is a ring homomorphism mod 2^32:
+the expected and actual checksums agree exactly in the error-free case even
+when the mathematical sums exceed int32 range. A flip of bit b in one
+element changes the checksum by exactly +/-2^b (mod 2^32), so interpreting
+the wrapped difference as a signed int32 recovers the *exact* signed error
+sum whenever |error| < 2^31. This removes any float rounding from detection:
+thresholding is exact, with zero false positives -- strictly stronger than
+the float-epsilon comparisons typical of GPU ABFT implementations and a good
+match for TPU int8 MXU passes.
+
+Float path: for bf16/f32 GEMMs, checksums are computed in f32 and compared
+with a magnitude threshold scaled by a rounding-noise floor.
+
+Tiled variant
+-------------
+The paper's recovery is tile-by-tile (Sec 5.4); ``tile_checksum_diff``
+evaluates per-(tile-row, tile-col) checksums so the correction mask and the
+DRAM-row accounting operate at tile granularity. The Pallas kernel in
+``repro.kernels.abft_matmul`` fuses these per-tile sums into the GEMM
+epilogue; this module is the pure-jnp oracle and the small-shape fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _exceeds(diff: jax.Array, thr) -> jax.Array:
+    """|diff| >= thr robust to int32 overflow: abs(INT32_MIN) wraps negative,
+    so a bit-31 flip (delta = -2^31) would escape an abs()-based check."""
+    return (diff >= thr) | (diff <= -thr)
+
+
+class AbftReport(NamedTuple):
+    """Detection output for one GEMM."""
+
+    row_diff: jax.Array   # (M,) signed error sum per row (int32 or f32)
+    col_diff: jax.Array   # (N,) signed error sum per column
+    row_flag: jax.Array   # (M,) bool, |row_diff| >= threshold
+    col_flag: jax.Array   # (N,) bool
+    n_row_err: jax.Array  # scalar int32
+    n_col_err: jax.Array  # scalar int32
+
+
+@dataclasses.dataclass(frozen=True)
+class AbftConfig:
+    threshold_bit: int = 10        # errors >= 2**threshold_bit are "large"
+    tile_m: int = 32               # systolic-array tile (paper default 32)
+    tile_n: int = 32
+    enabled: bool = True
+    # 'cross' = paper-faithful Fig 10(a): flagged-rows x flagged-cols.
+    # 'union' = beyond-paper: whole flagged rows AND whole flagged cols of a
+    #           tile. Same DRAM cost (recovery fetches whole repacked tiles),
+    #           but also catches "paired large errors that cancel within the
+    #           same row or column" -- the blind spot Sec 5.3 Step 2 accepts.
+    mask_policy: str = "union"
+
+    @property
+    def threshold(self) -> int:
+        return 1 << self.threshold_bit
+
+
+# ----------------------------------------------------------------------------
+# Full-matrix checksums
+# ----------------------------------------------------------------------------
+
+def expected_checksums_int(aq: jax.Array, bq: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(A @ B1, 1TA @ B) in wraparound int32. aq:(M,K) int8, bq:(K,N) int8."""
+    a32 = aq.astype(jnp.int32)
+    b32 = bq.astype(jnp.int32)
+    b_rowsum = jnp.sum(b32, axis=1)                 # (K,) fits int32: K*127
+    a_colsum = jnp.sum(a32, axis=0)                 # (K,)
+    exp_row = a32 @ b_rowsum                        # (M,) wraps mod 2^32
+    exp_col = a_colsum @ b32                        # (N,)
+    return exp_row, exp_col
+
+
+def checksum_diff_int(acc: jax.Array, exp_row: jax.Array, exp_col: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Signed per-row / per-col error sums (exact mod-2^32 arithmetic)."""
+    act_row = jnp.sum(acc, axis=1)
+    act_col = jnp.sum(acc, axis=0)
+    return act_row - exp_row, act_col - exp_col
+
+
+def detect_int(acc: jax.Array, aq: jax.Array, bq: jax.Array,
+               cfg: AbftConfig) -> AbftReport:
+    """Detect large errors in an int32 accumulator C=(A@B)."""
+    exp_row, exp_col = expected_checksums_int(aq, bq)
+    row_diff, col_diff = checksum_diff_int(acc, exp_row, exp_col)
+    thr = jnp.int32(cfg.threshold)
+    row_flag = _exceeds(row_diff, thr)
+    col_flag = _exceeds(col_diff, thr)
+    return AbftReport(row_diff, col_diff, row_flag, col_flag,
+                      jnp.sum(row_flag.astype(jnp.int32)),
+                      jnp.sum(col_flag.astype(jnp.int32)))
+
+
+def detect_f32(c: jax.Array, a: jax.Array, b: jax.Array,
+               cfg: AbftConfig, rel_floor: float = 1e-3) -> AbftReport:
+    """Float-path detection with a rounding-noise floor.
+
+    threshold_eff = max(2**threshold_bit_scaled, rel_floor * mean|C|) where
+    the bit threshold is interpreted on the same scale as C.
+    """
+    exp_row = a @ jnp.sum(b, axis=1)
+    exp_col = jnp.sum(a, axis=0) @ b
+    row_diff = jnp.sum(c, axis=1) - exp_row
+    col_diff = jnp.sum(c, axis=0) - exp_col
+    thr = jnp.maximum(jnp.float32(cfg.threshold),
+                      rel_floor * jnp.mean(jnp.abs(c)) * c.shape[1])
+    row_flag = jnp.abs(row_diff) >= thr
+    col_flag = jnp.abs(col_diff) >= thr
+    return AbftReport(row_diff, col_diff, row_flag, col_flag,
+                      jnp.sum(row_flag.astype(jnp.int32)),
+                      jnp.sum(col_flag.astype(jnp.int32)))
+
+
+def correction_mask(report: AbftReport) -> jax.Array:
+    """Cross-combine flagged rows x cols into the paper's correction mask.
+
+    Fig 10(a): all (flagged row, flagged col) intersections are treated as
+    potential error sites. Conservative (a superset of true sites), which is
+    safe because replacement values come from a near-identical checkpoint.
+    """
+    return jnp.outer(report.row_flag, report.col_flag)
+
+
+# ----------------------------------------------------------------------------
+# Tile-level checksums (the granularity the recovery scheduler works at)
+# ----------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def tile_checksum_diff(acc: jax.Array, aq: jax.Array, bq: jax.Array,
+                       cfg: AbftConfig) -> Tuple[jax.Array, jax.Array]:
+    """Per-tile checksum differences.
+
+    Returns (row_diff_t, col_diff_t):
+      row_diff_t: (Mt, Nt, tile_m) -- per tile, per local row
+      col_diff_t: (Mt, Nt, tile_n) -- per tile, per local col
+    where Mt = ceil(M/tile_m), Nt = ceil(N/tile_n). Exact int32 arithmetic.
+    """
+    m, n = acc.shape
+    k = aq.shape[1]
+    tm, tn = cfg.tile_m, cfg.tile_n
+    a32 = _pad_to(aq.astype(jnp.int32), tm, 0)
+    b32 = _pad_to(bq.astype(jnp.int32), tn, 1)
+    accp = _pad_to(_pad_to(acc, tm, 0), tn, 1)
+    mt, nt = accp.shape[0] // tm, accp.shape[1] // tn
+    acc_t = accp.reshape(mt, tm, nt, tn)
+
+    # Expected per-tile row sums: A_tile @ (B col-block row-sum)
+    b_blocksum = b32.reshape(k, nt, tn).sum(axis=2)          # (K, Nt)
+    exp_row = jnp.einsum("mk,kn->mn", a32, b_blocksum,
+                         preferred_element_type=jnp.int32)    # (Mp, Nt)
+    exp_row_t = exp_row.reshape(mt, tm, nt).transpose(0, 2, 1)  # (Mt, Nt, tm)
+    act_row_t = acc_t.sum(axis=3).transpose(0, 2, 1)            # (Mt, Nt, tm)
+
+    a_blocksum = a32.reshape(mt, tm, k).sum(axis=1)          # (Mt, K)
+    exp_col = jnp.einsum("mk,kn->mn", a_blocksum, b32,
+                         preferred_element_type=jnp.int32)    # (Mt, Np)
+    exp_col_t = exp_col.reshape(mt, nt, tn)                   # (Mt, Nt, tn)
+    act_col_t = acc_t.sum(axis=1).reshape(mt, nt, tn)
+
+    return act_row_t - exp_row_t, act_col_t - exp_col_t
+
+
+def tile_error_mask(row_diff_t: jax.Array, col_diff_t: jax.Array,
+                    cfg: AbftConfig, out_shape: Tuple[int, int]) -> Tuple[jax.Array, jax.Array]:
+    """Element mask (M, N) + per-tile flag (Mt, Nt) from tile checksums."""
+    thr = jnp.int32(cfg.threshold) if row_diff_t.dtype == jnp.int32 else jnp.float32(cfg.threshold)
+    row_flag = _exceeds(row_diff_t, thr)                      # (Mt, Nt, tm)
+    col_flag = _exceeds(col_diff_t, thr)                      # (Mt, Nt, tn)
+    if cfg.mask_policy == "cross":
+        mask_t = row_flag[:, :, :, None] & col_flag[:, :, None, :]
+    else:  # union
+        mask_t = row_flag[:, :, :, None] | col_flag[:, :, None, :]
+    tile_flag = jnp.any(mask_t, axis=(2, 3))                  # (Mt, Nt)
+    mt, nt, tm = row_flag.shape
+    tn = col_flag.shape[2]
+    mask = mask_t.transpose(0, 2, 1, 3).reshape(mt * tm, nt * tn)
+    return mask[: out_shape[0], : out_shape[1]], tile_flag

@@ -1,0 +1,184 @@
+"""DVFS operating points, the BER(V, f) surface, and fine-grained schedules.
+
+The physical DVFS actuation (on-chip LDO + ADPLL, Sec 5.1) is below the ISA;
+what the *algorithm* sees is: each (voltage, frequency) operating point has a
+bit-error rate, an energy-per-op factor (~V^2), and a speed factor (~f). We
+model that surface with an alpha-power-law critical-path delay and calibrate
+log10(BER) against the paper's three anchor operating points:
+
+    nominal    (0.90 V, 2.0 GHz)  -> effectively error-free (<=1e-12)
+    undervolt  (0.68 V, 2.0 GHz)  -> BER ~ 3e-3   (energy mode)
+    overclock  (0.88 V, 3.5 GHz)  -> BER ~ 3e-3   (speed mode)
+
+so the efficiency/reliability arithmetic of Table 1 / Fig 11 is reproduced by
+construction at the anchors and interpolated smoothly between them (Fig 1a).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+V_NOMINAL = 0.90
+F_NOMINAL_GHZ = 2.0
+V_TH = 0.30          # threshold voltage, alpha-power law
+ALPHA = 1.30         # velocity-saturation exponent (14nm-class)
+NOMINAL_SLACK = 0.10  # nominal point closes timing with 10% slack
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    voltage: float      # V
+    freq_ghz: float     # GHz
+    name: str = ""
+
+    @property
+    def energy_factor(self) -> float:
+        """Dynamic energy per op relative to nominal (~ C V^2)."""
+        return (self.voltage / V_NOMINAL) ** 2
+
+    @property
+    def speed_factor(self) -> float:
+        """Throughput relative to nominal (~ f)."""
+        return self.freq_ghz / F_NOMINAL_GHZ
+
+
+NOMINAL = OperatingPoint(0.90, 2.0, "nominal")
+UNDERVOLT = OperatingPoint(0.68, 2.0, "undervolt")   # energy mode
+OVERCLOCK = OperatingPoint(0.88, 3.5, "overclock")   # speed mode
+
+
+def _delay_ns(v: float) -> float:
+    """Critical-path delay, alpha-power law, calibrated at the nominal point."""
+    # d(V) = c * V / (V - Vth)^alpha ;  d(0.9V) == (1 - slack) * T(2GHz)
+    t_nom = 1.0 / F_NOMINAL_GHZ
+    c = (1.0 - NOMINAL_SLACK) * t_nom * (V_NOMINAL - V_TH) ** ALPHA / V_NOMINAL
+    return c * v / (v - V_TH) ** ALPHA
+
+
+def slack_ratio(op: OperatingPoint) -> float:
+    """(clock period - critical delay) / clock period; negative = violating."""
+    t = 1.0 / op.freq_ghz
+    return (t - _delay_ns(op.voltage)) / t
+
+
+def _fit_ber_coeffs() -> np.ndarray:
+    """Exact quadratic fit of log10(BER) in slack ratio through the anchors."""
+    anchors = [(NOMINAL, -12.0), (UNDERVOLT, np.log10(3e-3)), (OVERCLOCK, np.log10(3e-3))]
+    s = np.array([slack_ratio(op) for op, _ in anchors])
+    y = np.array([v for _, v in anchors])
+    feats = np.stack([np.ones_like(s), s, s * s], axis=1)
+    return np.linalg.solve(feats, y)
+
+
+_BER_COEFFS = _fit_ber_coeffs()
+
+
+def ber_of(op: OperatingPoint) -> float:
+    """BER at an operating point (Fig 1a surface)."""
+    s = slack_ratio(op)
+    log10b = float(_BER_COEFFS[0] + _BER_COEFFS[1] * s + _BER_COEFFS[2] * s * s)
+    return float(np.clip(10.0 ** log10b, 1e-15, 0.5))
+
+
+def pareto_sweep(voltages: Sequence[float], freqs: Sequence[float]):
+    """Enumerate (op, ber, energy_factor, speed_factor) for Fig 11(a)."""
+    out = []
+    for v in voltages:
+        for f in freqs:
+            op = OperatingPoint(v, f)
+            out.append((op, ber_of(op), op.energy_factor, op.speed_factor))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Fine-grained resilience-aware schedule (Sec 5.2)
+# ----------------------------------------------------------------------------
+
+# Block resilience classes (see core/policies.py for classification).
+CLASS_EMBED = 0        # conditioning / timestep / token embeddings
+CLASS_FIRST_BLOCK = 1  # first transformer block
+CLASS_BODY = 2         # middle + deep blocks
+N_CLASSES = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class DvfsSchedule:
+    """Per-(timestep, block-class) BER table for the sampling scan.
+
+    ``ber_table``: (num_steps, N_CLASSES) float32 -- 0.0 rows encode the
+    nominal (error-free) point. Built once per run; indexed inside the scan
+    with the running step, so the whole schedule is trace-free.
+    """
+
+    ber_table: jax.Array           # (T, N_CLASSES)
+    aggressive: OperatingPoint     # the point used for resilient work
+    nominal_steps: int             # first k steps fully protected
+
+    def ber_for(self, step: jax.Array, block_class: jax.Array) -> jax.Array:
+        return self.ber_table[step, block_class]
+
+
+def fine_grained_schedule(num_steps: int,
+                          aggressive: OperatingPoint = UNDERVOLT,
+                          nominal_steps: int = 2,
+                          protect_embed: bool = True,
+                          protect_first_block: bool = True) -> DvfsSchedule:
+    """Paper default: nominal for (embeddings, first 2 steps), aggressive else."""
+    agg_ber = ber_of(aggressive)
+    table = np.full((num_steps, N_CLASSES), agg_ber, dtype=np.float32)
+    table[:nominal_steps, :] = 0.0
+    if protect_embed:
+        table[:, CLASS_EMBED] = 0.0
+    if protect_first_block:
+        table[:, CLASS_FIRST_BLOCK] = 0.0
+    return DvfsSchedule(jnp.asarray(table), aggressive, nominal_steps)
+
+
+def uniform_schedule(num_steps: int, op: OperatingPoint) -> DvfsSchedule:
+    """Coarse DVFS baseline: one operating point for everything."""
+    table = np.full((num_steps, N_CLASSES), ber_of(op), dtype=np.float32)
+    return DvfsSchedule(jnp.asarray(table), op, 0)
+
+
+# ----------------------------------------------------------------------------
+# Runtime BER monitor (Sec 5.1): ABFT-reported error counts -> BER estimate
+# ----------------------------------------------------------------------------
+
+class BerMonitorState(NamedTuple):
+    ema_ber: jax.Array      # scalar f32, EMA of the estimated BER
+    op_index: jax.Array     # scalar int32 index into the op-point ladder
+    n_updates: jax.Array    # scalar int32
+
+
+def ber_monitor_init(initial_ber: float = 0.0) -> BerMonitorState:
+    return BerMonitorState(jnp.float32(initial_ber), jnp.int32(0), jnp.int32(0))
+
+
+def ber_monitor_update(state: BerMonitorState,
+                       detected_errors: jax.Array,
+                       n_words: int,
+                       threshold_bit: int,
+                       target_ber: float,
+                       n_ladder: int = 5,
+                       decay: float = 0.9) -> BerMonitorState:
+    """Update the runtime BER estimate from one GEMM's ABFT report.
+
+    A large error is detected when any of the top (32 - threshold_bit) bits
+    flips, so detected_count ~= n_words * (32 - threshold_bit) * BER and the
+    unbiased estimate inverts that. The monitor walks an op-point ladder
+    index: +1 (more conservative) when the estimate runs hot (>2x target),
+    -1 when it runs cold (<target/2) -- hysteresis keeps it stable.
+    """
+    visible_bits = max(32 - threshold_bit, 1)
+    est = detected_errors.astype(jnp.float32) / (n_words * visible_bits)
+    ema = jnp.where(state.n_updates == 0, est,
+                    decay * state.ema_ber + (1.0 - decay) * est)
+    hot = ema > 2.0 * target_ber
+    cold = ema < 0.5 * target_ber
+    op_index = jnp.clip(state.op_index + hot.astype(jnp.int32)
+                        - cold.astype(jnp.int32), 0, n_ladder - 1)
+    return BerMonitorState(ema, op_index, state.n_updates + 1)

@@ -1,0 +1,107 @@
+"""Generation-quality metrics (offline proxies for LPIPS / CLIP / FID).
+
+The paper's characterization protocol (Sec 4) fixes the initial noise seed
+and measures *perceptual deviation of the faulty output from the clean
+output of the same run*. That protocol needs a perceptual distance, not the
+pretrained LPIPS network specifically. We use:
+
+  lpips_proxy  -- multi-scale random-feature perceptual distance: a fixed,
+                  seed-pinned 3-level conv pyramid (random Gaussian filters,
+                  which are well-documented to give usable perceptual
+                  embeddings); unit-normalized feature diffs averaged over
+                  scales, like LPIPS. Monotone in perceptual corruption.
+  clip_proxy   -- cosine similarity in a fixed random-projection embedding
+                  of (image features, conditioning vector); stands in for
+                  semantic-fidelity trends only.
+  psnr / ssim  -- standard reference metrics, exact implementations.
+  fid_proxy    -- Frechet distance between Gaussian fits of random-feature
+                  embeddings of two image batches.
+
+Absolute values are NOT comparable to the paper's; orderings and
+degradation thresholds are. See DESIGN.md "Changed assumptions".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_FEAT_SEED = 20260713
+
+
+@functools.lru_cache(maxsize=None)
+def _filters(in_ch: int, out_ch: int, level: int) -> np.ndarray:
+    rng = np.random.RandomState(_FEAT_SEED + level)
+    w = rng.randn(3, 3, in_ch, out_ch).astype(np.float32)
+    return w / np.sqrt(9.0 * in_ch)
+
+
+def _conv(x: jax.Array, w: np.ndarray, stride: int = 2) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, jnp.asarray(w), window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pyramid(img: jax.Array, channels=(16, 32, 64)) -> list[jax.Array]:
+    """img: (B, H, W, C) in [-1, 1] -> list of feature maps."""
+    feats = []
+    x = img
+    in_ch = img.shape[-1]
+    for lvl, out_ch in enumerate(channels):
+        x = jnp.tanh(_conv(x, _filters(in_ch, out_ch, lvl)))
+        feats.append(x)
+        in_ch = out_ch
+    return feats
+
+
+def lpips_proxy(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Perceptual distance between two (B,H,W,C) images in [-1,1]. Lower=closer."""
+    fa, fb = _pyramid(a), _pyramid(b)
+    total = 0.0
+    for xa, xb in zip(fa, fb):
+        na = xa / (jnp.linalg.norm(xa, axis=-1, keepdims=True) + 1e-6)
+        nb = xb / (jnp.linalg.norm(xb, axis=-1, keepdims=True) + 1e-6)
+        total = total + jnp.mean(jnp.sum((na - nb) ** 2, axis=-1))
+    return total / len(fa)
+
+
+def clip_proxy(img: jax.Array, cond: jax.Array) -> jax.Array:
+    """Cosine(embedding(img), projection(cond)) -- semantic-trend proxy."""
+    feats = _pyramid(img)[-1].mean(axis=(1, 2))          # (B, C)
+    rng = np.random.RandomState(_FEAT_SEED + 99)
+    proj = jnp.asarray(rng.randn(cond.shape[-1], feats.shape[-1])
+                       .astype(np.float32) / np.sqrt(cond.shape[-1]))
+    ce = cond @ proj
+    num = jnp.sum(feats * ce, axis=-1)
+    den = (jnp.linalg.norm(feats, axis=-1) * jnp.linalg.norm(ce, axis=-1) + 1e-6)
+    return jnp.mean(num / den)
+
+
+def psnr(a: jax.Array, b: jax.Array, data_range: float = 2.0) -> jax.Array:
+    mse = jnp.mean((a - b) ** 2)
+    return 10.0 * jnp.log10(data_range ** 2 / jnp.maximum(mse, 1e-12))
+
+
+def ssim(a: jax.Array, b: jax.Array, data_range: float = 2.0) -> jax.Array:
+    """Global-window SSIM (sufficient for relative comparisons)."""
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mu_a, mu_b = jnp.mean(a), jnp.mean(b)
+    va, vb = jnp.var(a), jnp.var(b)
+    cov = jnp.mean((a - mu_a) * (b - mu_b))
+    return ((2 * mu_a * mu_b + c1) * (2 * cov + c2)
+            / ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))
+
+
+def fid_proxy(batch_a: jax.Array, batch_b: jax.Array) -> jax.Array:
+    """Frechet distance between random-feature Gaussians of two batches."""
+    fa = _pyramid(batch_a)[-1].mean(axis=(1, 2))
+    fb = _pyramid(batch_b)[-1].mean(axis=(1, 2))
+    mu_a, mu_b = fa.mean(0), fb.mean(0)
+    va, vb = fa.var(0), fb.var(0)
+    # Diagonal-covariance Frechet (full sqrtm is ill-conditioned at B<64).
+    return (jnp.sum((mu_a - mu_b) ** 2)
+            + jnp.sum(va + vb - 2.0 * jnp.sqrt(jnp.maximum(va * vb, 0.0))))

@@ -1,0 +1,48 @@
+"""Tile-contiguous data-layout repacking (Sec 5.4, Fig 10b).
+
+Conventional row-major layouts scatter a (tm x tn) tile across tm different
+DRAM rows; tile-wise recovery then pays tm row activations per corrected
+tile. Repacking stores each tile as a contiguous 1-D run so a tile recovery
+touches ceil(tile_bytes / dram_row_bytes) rows instead.
+
+The transform itself is functional (and is exactly the layout a Pallas
+BlockSpec-tiled kernel consumes, so on TPU the repack is free at kernel
+boundaries); the row-activation *accounting* lives in perfmodel/dram.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to_tiles(x: jax.Array, tm: int, tn: int) -> jax.Array:
+    m, n = x.shape
+    return jnp.pad(x, ((0, (-m) % tm), (0, (-n) % tn)))
+
+
+def repack(x: jax.Array, tm: int, tn: int) -> jax.Array:
+    """(M, N) row-major -> (Mt, Nt, tm*tn) tile-contiguous."""
+    xp = pad_to_tiles(x, tm, tn)
+    mp, np_ = xp.shape
+    mt, nt = mp // tm, np_ // tn
+    return xp.reshape(mt, tm, nt, tn).transpose(0, 2, 1, 3).reshape(mt, nt, tm * tn)
+
+
+def unpack(xt: jax.Array, shape: Tuple[int, int], tm: int, tn: int) -> jax.Array:
+    """Inverse of ``repack`` (crops padding)."""
+    mt, nt, _ = xt.shape
+    x = xt.reshape(mt, nt, tm, tn).transpose(0, 2, 1, 3).reshape(mt * tm, nt * tn)
+    return x[: shape[0], : shape[1]]
+
+
+def gather_tiles(xt: jax.Array, tile_flag: jax.Array) -> jax.Array:
+    """Select flagged tiles from a repacked tensor (recovery read set).
+
+    Returns (n_tiles_padded, tm*tn) with unflagged rows zeroed -- the
+    fixed-shape analogue of the recovery scheduler's coalesced read list.
+    """
+    flags = tile_flag.reshape(-1)
+    flat = xt.reshape(flags.shape[0], -1)
+    return jnp.where(flags[:, None], flat, jnp.zeros_like(flat))

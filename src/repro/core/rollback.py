@@ -1,0 +1,71 @@
+"""Rollback-ABFT: correct large errors with values from a previous timestep.
+
+Sec 5.3-5.4 of the paper. Checkpoints of GEMM outputs are "offloaded" every
+``interval`` denoising steps (functionally: carried alongside the sampler
+state; the DRAM traffic is charged by ``repro.perfmodel``). When ABFT flags
+large errors, the correction mask (flagged rows x flagged cols) is overwritten
+with the checkpoint values -- exploiting the cross-step similarity of
+diffusion activations (Fig 2b) instead of recomputing.
+
+Sharding note: the checkpoint store is a pytree whose leaves mirror the live
+activations, so under pjit it inherits their PartitionSpec; both checksum
+verification and the masked select are shard-local (no collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CkptStore = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class RollbackConfig:
+    interval: int = 10          # offload checkpoints every n steps (Sec 6.4)
+    enabled: bool = True
+
+
+def should_checkpoint(step: jax.Array, interval: int) -> jax.Array:
+    """Steps 0, n, 2n, ... refresh the checkpoint store."""
+    return (step % interval) == 0
+
+
+def update_store(store: CkptStore, name: str, value: jax.Array,
+                 do_update: jax.Array) -> CkptStore:
+    """Functionally refresh one entry when ``do_update`` (traced bool)."""
+    prev = store.get(name)
+    if prev is None:
+        new = value
+    else:
+        new = jnp.where(do_update, value, prev)
+    out = dict(store)
+    out[name] = new
+    return out
+
+
+def correct(current: jax.Array, checkpoint: Optional[jax.Array],
+            mask: jax.Array, have_ckpt: jax.Array) -> jax.Array:
+    """Overwrite masked positions with checkpoint values (Step 4, Sec 5.3).
+
+    When no checkpoint exists yet (very first steps -- which the fine-grained
+    schedule runs at the nominal, error-free point anyway), fall back to
+    zeroing the masked positions (ApproxABFT-style) so the value magnitude
+    distortion is still removed.
+    """
+    if checkpoint is None:
+        return jnp.where(mask, jnp.zeros_like(current), current)
+    replacement = jnp.where(have_ckpt, checkpoint, jnp.zeros_like(current))
+    return jnp.where(mask, replacement, current)
+
+
+def init_store_like(example: Dict[str, jax.Array]) -> CkptStore:
+    """Zero-initialized store matching an example activation pytree."""
+    return {k: jnp.zeros_like(v) for k, v in example.items()}
+
+
+def store_bytes(store: CkptStore) -> int:
+    """Checkpoint footprint (the 'DRAM offload' volume per refresh)."""
+    return int(sum(v.size * v.dtype.itemsize for v in store.values()))

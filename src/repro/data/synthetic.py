@@ -1,0 +1,127 @@
+"""Synthetic data pipelines (offline container; no downloads).
+
+Two generators with deterministic, shardable, checkpointable state:
+
+  * token streams for LM training (mixture of Zipf-distributed ids with
+    local n-gram structure so loss actually decreases),
+  * structured latent images for diffusion training: random multi-scale
+    Gaussian blobs + frequency textures in [-1, 1], class-conditioned so a
+    small DiT can visibly learn p(latent | class).
+
+The loader yields per-host shards: ``host_batch = global_batch //
+num_data_shards`` with the shard index folded into the PRNG key, so any
+host can deterministically regenerate any step's batch -- which is what
+makes data-pipeline state checkpointable as a single (step,) integer and
+restartable after preemption (see checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    kind: str                    # "lm" | "latent" | "frames"
+    vocab: int = 0
+    seq_len: int = 0
+    latent_size: int = 0
+    latent_channels: int = 4
+    num_classes: int = 10
+    cond_dim: int = 0
+    cond_tokens: int = 0
+    encoder_seq: int = 0
+    global_batch: int = 8
+    seed: int = 0
+
+
+def _zipf_tokens(key, shape, vocab: int) -> jax.Array:
+    """Zipf-ish marginal with Markov structure: next ~ prev + noise."""
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, shape, minval=1e-4, maxval=1.0)
+    base = (vocab * u ** 2.5).astype(jnp.int32) % vocab
+    drift = jax.random.randint(k2, shape, -3, 4)
+    toks = jnp.cumsum(drift, axis=-1) % 17 + base
+    return jnp.clip(toks, 0, vocab - 1)
+
+
+def _latents(key, batch: int, size: int, ch: int, labels) -> jax.Array:
+    """Class-structured blobs: center/scale/frequency keyed by label."""
+    kb, kf, kp = jax.random.split(key, 3)
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, size), jnp.linspace(-1, 1, size),
+                          indexing="ij")
+    ang = labels.astype(jnp.float32)[:, None, None] * 0.7
+    cx = 0.5 * jnp.cos(ang)
+    cy = 0.5 * jnp.sin(ang)
+    blob = jnp.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2)
+                     / (0.1 + 0.02 * labels.astype(jnp.float32)
+                        )[:, None, None]))
+    freq = 2.0 + labels.astype(jnp.float32)[:, None, None]
+    tex = 0.3 * jnp.sin(freq * np.pi * xx)[..., None] * jnp.ones((1, 1, ch))
+    noise = 0.05 * jax.random.normal(kp, (batch, size, size, ch))
+    x = blob[..., None] * jnp.ones((1, 1, ch)) + tex + noise
+    return jnp.clip(2.0 * x - 1.0, -1.0, 1.0).astype(jnp.float32)
+
+
+def batch_at(cfg: DataConfig, step: int, shard: int = 0,
+             num_shards: int = 1) -> Dict[str, jax.Array]:
+    """Deterministically materialize the batch for (step, shard)."""
+    assert cfg.global_batch % num_shards == 0
+    b = cfg.global_batch // num_shards
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(cfg.seed), step), shard)
+    if cfg.kind == "lm":
+        return {"tokens": _zipf_tokens(key, (b, cfg.seq_len + 1), cfg.vocab)}
+    if cfg.kind == "latent":
+        kl, kc, kt = jax.random.split(key, 3)
+        labels = jax.random.randint(kl, (b,), 0, cfg.num_classes)
+        out = {"latents": _latents(kc, b, cfg.latent_size,
+                                   cfg.latent_channels, labels),
+               "labels": labels}
+        if cfg.cond_tokens:
+            out["text"] = 0.1 * jax.random.normal(
+                kt, (b, cfg.cond_tokens, cfg.cond_dim))
+        return out
+    if cfg.kind == "frames":
+        kf, kt = jax.random.split(key)
+        return {"frames": 0.5 * jax.random.normal(
+                    kf, (b, cfg.encoder_seq, cfg.cond_dim or cfg.vocab)),
+                "tokens": _zipf_tokens(kt, (b, cfg.seq_len + 1), cfg.vocab)}
+    raise ValueError(cfg.kind)
+
+
+def iterate(cfg: DataConfig, start_step: int = 0, shard: int = 0,
+            num_shards: int = 1) -> Iterator[Dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        yield batch_at(cfg, step, shard, num_shards)
+        step += 1
+
+
+def for_model(model_cfg, global_batch: int, seq_len: int = 0,
+              seed: int = 0) -> DataConfig:
+    """DataConfig matching a ModelConfig's input contract."""
+    fam = model_cfg.family
+    if fam in ("dense", "moe", "ssm", "hybrid"):
+        return DataConfig("lm", vocab=model_cfg.vocab, seq_len=seq_len,
+                          global_batch=global_batch, seed=seed)
+    if fam == "vlm":
+        return DataConfig("lm", vocab=model_cfg.vocab, seq_len=seq_len,
+                          global_batch=global_batch, seed=seed)
+    if fam == "encdec":
+        return DataConfig("frames", vocab=model_cfg.vocab, seq_len=seq_len,
+                          encoder_seq=model_cfg.encoder_seq,
+                          cond_dim=model_cfg.d_model,
+                          global_batch=global_batch, seed=seed)
+    if fam in ("dit", "unet"):
+        return DataConfig("latent", latent_size=model_cfg.latent_size,
+                          latent_channels=model_cfg.latent_channels,
+                          num_classes=max(model_cfg.num_classes, 1),
+                          cond_dim=model_cfg.cond_dim,
+                          cond_tokens=model_cfg.cond_tokens,
+                          global_batch=global_batch, seed=seed)
+    raise ValueError(fam)

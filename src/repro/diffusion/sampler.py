@@ -1,0 +1,185 @@
+"""The DRIFT sampling loop: DDIM scan with fine-grained DVFS, rollback-ABFT
+checkpointing, BER monitoring, and optional TaylorSeer caching.
+
+This is the paper's end-to-end system (Fig 8): one lax.scan over denoising
+steps whose carry holds (latents, rollback checkpoint stores, BER-monitor
+state, TaylorSeer table). Per step:
+
+  1. the DVFS schedule chooses the BER per resilience class
+     (nominal for the first ``nominal_steps`` and for embedding GEMMs),
+  2. the model runs with fault injection + ABFT + tile rollback
+     (ExecContext inside the model),
+  3. every ``interval`` steps the checkpoint stores refresh ("offload"),
+  4. the BER monitor folds the step's detected-error count into its
+     estimate (Sec 5.1 feedback loop),
+  5. DDIM updates the latents.
+
+Works for DiT/PixArt (scanned or unrolled blocks) and the SD1.5 UNet (flat
+checkpoint store derived by eval_shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dvfs as dvfs_lib
+from repro.core.exec_ctx import DriftSystemConfig, ExecContext
+from repro.diffusion import schedule as sched_lib
+from repro.diffusion import taylorseer as ts_lib
+from repro.models import dit as dit_lib
+from repro.models import unet as unet_lib
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    num_sample_steps: int = 50
+    num_train_steps: int = 1000
+    drift: DriftSystemConfig = dataclasses.field(
+        default_factory=lambda: DriftSystemConfig(mode="clean"))
+    schedule: Optional[dvfs_lib.DvfsSchedule] = None   # None -> error-free
+    taylorseer: ts_lib.TaylorSeerConfig = dataclasses.field(
+        default_factory=lambda: ts_lib.TaylorSeerConfig(enabled=False))
+    monitor_target_ber: float = 3e-3
+    # Fig 6 block-level study: per-layer / embed BER multipliers
+    layer_gate: Optional[Any] = None
+    embed_gate: Optional[Any] = None
+
+
+class SampleOutput(NamedTuple):
+    latents: jax.Array
+    monitor: dvfs_lib.BerMonitorState
+    total_corrected: jax.Array
+    n_model_evals: jax.Array
+
+
+def _model_eval(model_cfg: ModelConfig, params, latents, t, cond, text,
+                drift_inputs, gates=(None, None)):
+    """One denoiser evaluation, optionally DRIFT-protected."""
+    scfg, key, step_idx, ber_by_class, stores, have_ckpt = drift_inputs
+    if scfg.mode == "clean":
+        # quantized error-free baseline == drift path at BER 0 (same GEMMs,
+        # detections provably empty); reuse the store plumbing.
+        scfg = dataclasses.replace(scfg, mode="drift")
+        ber_by_class = jnp.zeros_like(ber_by_class)
+    if scfg.mode == "float_clean":
+        if model_cfg.family == "unet":
+            return unet_lib.forward(model_cfg, params, latents, t, text), \
+                stores, jnp.int32(0), jnp.int32(0)
+        eps, _, _ = dit_lib.forward(model_cfg, params, latents, t, cond,
+                                    text=text)
+        return eps, stores, jnp.int32(0), jnp.int32(0)
+
+    if model_cfg.family == "unet":
+        ctx = ExecContext(scfg, key=key, step=step_idx,
+                          ber_by_class=ber_by_class, state_in=stores,
+                          have_ckpt=have_ckpt)
+        eps = unet_lib.forward(model_cfg, params, latents, t, text, ctx=ctx)
+        new_stores = ctx.state_out if ctx.state_out else stores
+        return eps, new_stores, ctx.stats["corrected_elems"], \
+            ctx.stats["detected_row_errors"]
+
+    embed_store, block_store = stores
+    ds = dit_lib.DriftState(cfg=scfg, key=key, step=step_idx,
+                            ber_by_class=ber_by_class,
+                            embed_store=embed_store,
+                            block_store=block_store, have_ckpt=have_ckpt,
+                            layer_gate=gates[0], embed_gate=gates[1])
+    eps, new_ds, stats = dit_lib.forward(model_cfg, params, latents, t, cond,
+                                         text=text, drift=ds)
+    corrected = stats.get("corrected_elems", jnp.int32(0))
+    detected = stats.get("detected_row_errors", jnp.int32(0))
+    # Modes that never write checkpoints (faulty / zeroing / recompute
+    # baselines) return empty stores; keep the carry structure stable.
+    new_embed = new_ds.embed_store if new_ds.embed_store else embed_store
+    new_block = (new_ds.block_store
+                 if jax.tree_util.tree_leaves(new_ds.block_store)
+                 else block_store)
+    return eps, (new_embed, new_block), corrected, detected
+
+
+def init_stores(model_cfg: ModelConfig, params, latents, t, cond, text,
+                scfg: DriftSystemConfig):
+    """Zero checkpoint stores with the right structure (eval_shape, no run)."""
+    if scfg.mode == "float_clean":
+        return ()
+    if model_cfg.family == "unet":
+        def probe():
+            ctx = ExecContext(dataclasses.replace(scfg, mode="drift"),
+                              key=jax.random.PRNGKey(0), step=0,
+                              ber_by_class=jnp.zeros(3), state_in={},
+                              have_ckpt=False)
+            unet_lib.forward(model_cfg, params, latents, t, text, ctx=ctx)
+            return ctx.state_out
+        spec = jax.eval_shape(probe)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    return dit_lib.drift_store_spec(model_cfg, latents.shape[0])
+
+
+def sample(model_cfg: ModelConfig, params, key: jax.Array,
+           latents0: jax.Array, cond, text,
+           cfg: SamplerConfig) -> SampleOutput:
+    """Run the full denoising chain from Gaussian latents."""
+    sched = sched_lib.DdpmSchedule.default(cfg.num_train_steps)
+    ts = sched_lib.ddim_timesteps(cfg.num_train_steps, cfg.num_sample_steps)
+    t_prev = np.concatenate([ts[1:], [-1]]).astype(np.int32)
+
+    if cfg.schedule is not None:
+        ber_table = cfg.schedule.ber_table
+    else:
+        ber_table = jnp.zeros((cfg.num_sample_steps, dvfs_lib.N_CLASSES))
+
+    b = latents0.shape[0]
+    t0 = jnp.full((b,), float(ts[0]), jnp.float32)
+    stores0 = init_stores(model_cfg, params, latents0, t0, cond, text,
+                          cfg.drift)
+    taylor0 = ts_lib.init_state(latents0.shape)
+    mon0 = dvfs_lib.ber_monitor_init()
+
+    def step_fn(carry, inp):
+        latents, stores, taylor, mon, corrected, nevals = carry
+        i, t_now, t_nxt = inp
+        tvec = jnp.full((b,), t_now, jnp.float32)
+        ber_by_class = ber_table[jnp.minimum(i, ber_table.shape[0] - 1)]
+        drift_inputs = (cfg.drift, jax.random.fold_in(key, i), i,
+                        ber_by_class, stores, i > 0)
+
+        def do_compute(_):
+            eps, new_stores, corr, detected = _model_eval(
+                model_cfg, params, latents, tvec, cond, text, drift_inputs,
+                gates=(cfg.layer_gate, cfg.embed_gate))
+            new_taylor = ts_lib.update_on_compute(taylor, eps)
+            return eps, new_stores, new_taylor, corr, detected, jnp.int32(1)
+
+        def do_forecast(_):
+            k = i % cfg.taylorseer.interval
+            eps = ts_lib.forecast(taylor, k, cfg.taylorseer.interval,
+                                  cfg.taylorseer.order)
+            return (eps, stores, taylor, jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0))
+
+        if cfg.taylorseer.enabled:
+            eps, stores2, taylor2, corr, detected, ran = jax.lax.cond(
+                ts_lib.should_compute(i, cfg.taylorseer),
+                do_compute, do_forecast, operand=None)
+        else:
+            eps, stores2, taylor2, corr, detected, ran = do_compute(None)
+
+        n_words = max(int(np.prod(latents0.shape)), 1)
+        mon2 = dvfs_lib.ber_monitor_update(
+            mon, detected, n_words, cfg.drift.abft.threshold_bit,
+            cfg.monitor_target_ber)
+        new_latents = sched.ddim_step(latents, eps, t_now, t_nxt)
+        return (new_latents, stores2, taylor2, mon2,
+                corrected + corr, nevals + ran), None
+
+    carry0 = (latents0, stores0, taylor0, mon0, jnp.int32(0), jnp.int32(0))
+    (latents, _, _, mon, corrected, nevals), _ = jax.lax.scan(
+        step_fn, carry0,
+        (jnp.arange(len(ts), dtype=jnp.int32),
+         jnp.asarray(ts), jnp.asarray(t_prev)))
+    return SampleOutput(latents, mon, corrected, nevals)

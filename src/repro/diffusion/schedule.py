@@ -1,0 +1,48 @@
+"""Diffusion noise schedules: DDPM forward process + DDIM sampling steps."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DdpmSchedule:
+    betas: jax.Array            # (T,)
+    alphas_cum: jax.Array       # (T,) cumulative prod of (1 - beta)
+    num_steps: int
+
+    @staticmethod
+    def default(num_steps: int = 1000, beta_start: float = 1e-4,
+                beta_end: float = 2e-2) -> "DdpmSchedule":
+        betas = np.linspace(beta_start, beta_end, num_steps, dtype=np.float32)
+        alphas_cum = np.cumprod(1.0 - betas)
+        return DdpmSchedule(jnp.asarray(betas), jnp.asarray(alphas_cum),
+                            num_steps)
+
+    def q_sample(self, x0: jax.Array, t: jax.Array, eps: jax.Array
+                 ) -> jax.Array:
+        """Forward noising: x_t = sqrt(a_t) x0 + sqrt(1-a_t) eps. t: (B,)."""
+        a = self.alphas_cum[t]
+        sh = (-1,) + (1,) * (x0.ndim - 1)
+        return (jnp.sqrt(a).reshape(sh) * x0
+                + jnp.sqrt(1.0 - a).reshape(sh) * eps)
+
+    def ddim_step(self, x_t: jax.Array, eps_pred: jax.Array, t, t_prev
+                  ) -> jax.Array:
+        """Deterministic DDIM update from step t to t_prev (eta=0)."""
+        a_t = self.alphas_cum[jnp.maximum(t, 0)]
+        a_p = jnp.where(t_prev >= 0, self.alphas_cum[jnp.maximum(t_prev, 0)],
+                        jnp.float32(1.0))
+        x0 = (x_t - jnp.sqrt(1.0 - a_t) * eps_pred) / jnp.sqrt(a_t)
+        x0 = jnp.clip(x0, -4.0, 4.0)
+        return jnp.sqrt(a_p) * x0 + jnp.sqrt(1.0 - a_p) * eps_pred
+
+
+def ddim_timesteps(num_train_steps: int, num_sample_steps: int) -> np.ndarray:
+    """Evenly spaced sampling timesteps, descending (e.g. 1000 -> 50)."""
+    return np.linspace(num_train_steps - 1, 0, num_sample_steps
+                       ).round().astype(np.int32)

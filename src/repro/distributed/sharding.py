@@ -1,0 +1,184 @@
+"""Per-architecture sharding rules for the (pod, data, model) mesh.
+
+Conventions (MaxText-style FSDP + TP/EP):
+  * ``model`` axis: tensor parallel -- attention heads / FFN hidden / vocab /
+    MoE experts / SSM inner channels.
+  * ``data`` axis (+ ``pod`` when present): data parallel for activations,
+    FSDP ("zero-3") for weights and optimizer state -- every weight matrix is
+    additionally sharded along its non-TP dimension, so even kimi-k2's
+    ~2 TB of bf16 weights fit (~4 GB/chip at 512 ways).
+  * Batch shards on ("pod", "data") when divisible; the 500k-decode cell
+    (batch=1) replicates batch and shards the KV-cache/state sequence dim
+    instead.
+  * KV caches shard heads on ``model`` when kv_heads divides the axis, else
+    the sequence dim (GQA kv=2 cases like glm4 would pad 8x otherwise).
+
+Everything is expressed as PartitionSpec trees matched by parameter path,
+consumed by pjit in launch/{dryrun,train,serve}.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+# --------------------------------------------------------------- params
+_RULES = [
+    # (path regex, spec builder(d_axes))  -- applied to the LAST dims;
+    # stacked-layer leading L handled by padding None on the left.
+    # NOTE: order matters -- expert-parallel MoE rules must precede the
+    # generic w_gate/w_up/w_down rules.
+    (r"moe/w_gate$",           lambda d: P("model", d, None)),  # (E, dm, f)
+    (r"moe/w_up$",             lambda d: P("model", d, None)),
+    (r"moe/w_down$",           lambda d: P("model", None, d)),
+    (r"embed$",                lambda d: P("model", d)),        # (V, dm)
+    (r"lm_head$",              lambda d: P(d, "model")),        # (dm, V)
+    (r"(wq|wk|wv)$",           lambda d: P(d, "model")),
+    (r"wo$",                   lambda d: P("model", d)),
+    (r"(w_gate|w_up|mlp_w1|t_w1|t_w2|adaln_w|in_proj|patch_w|text_proj)$",
+                               lambda d: P(d, "model")),
+    (r"(w_down|mlp_w2|out_proj)$", lambda d: P("model", d)),
+    (r"final_adaln_w$",        lambda d: P(d, "model")),
+    (r"final_w$",              lambda d: P(d, None)),
+    (r"router$",               lambda d: P(None, None)),        # tiny; repl
+                                                                # avoids d-dim
+                                                                # conflicts
+    (r"conv_w$",               lambda d: P(None, "model")),     # (cw, cch)
+    (r"(conv_b|norm_scale)$",  lambda d: P("model",)),
+    (r"pos_embed|enc_pos",     lambda d: P(None, None)),
+    (r"class_embed$",          lambda d: P(None, d)),
+    (r"(conv1|conv2|skip|down|up|conv_in|conv_out)$",
+                               lambda d: P(None, None, None, "model")),
+    (r"temb_w$",               lambda d: P(d, "model")),
+]
+
+
+def _axes_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return int(np.prod([axis_size(mesh, a) for a in names]))
+
+
+def _fix_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not divide (pjit requires exact
+    divisibility for explicit arg shardings -- e.g. mamba2's vocab 50280 or
+    hymba's in_proj 6482 are not multiples of 16)."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is not None and dim % _axes_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out[: len(shape)])
+
+
+def spec_for_param(path: str, shape, mesh: Mesh) -> P:
+    ndim = len(shape)
+    d = data_axes(mesh)
+    d = d if len(d) > 1 else (d[0] if d else None)
+    for pat, builder in _RULES:
+        if re.search(pat, path):
+            spec = builder(d)
+            pad = ndim - len(spec)
+            if pad < 0:   # param has fewer dims than the rule (e.g. bias)
+                spec = P(*spec[-ndim:]) if ndim else P()
+            else:
+                spec = P(*([None] * pad + list(spec)))
+            return _fix_divisibility(spec, shape, mesh)
+    return P(*([None] * ndim))   # replicate (norms, scalars, biases)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_specs(tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a parameter pytree (incl. optimizer state)."""
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        return spec_for_param(p, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def shardings_for(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(tree, mesh))
+
+
+# --------------------------------------------------------------- batches
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh,
+               seq_dim: Optional[int] = None) -> P:
+    """Shard dim 0 (batch) over (pod, data) when divisible; else fall back
+    to sharding ``seq_dim`` and replicating batch (the batch=1 long-decode
+    cell)."""
+    d = data_axes(mesh)
+    dsize = int(np.prod([axis_size(mesh, a) for a in d]))
+    spec = [None] * len(shape)
+    if shape[0] % dsize == 0 and dsize > 1:
+        spec[0] = d if len(d) > 1 else d[0]
+    elif seq_dim is not None and shape[seq_dim] % dsize == 0:
+        spec[seq_dim] = d if len(d) > 1 else d[0]
+    return P(*spec)
+
+
+def cache_spec(cfg: ModelConfig, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """(L, B, S, Hkv, hd) KV-cache sharding."""
+    d = data_axes(mesh)
+    dsize = int(np.prod([axis_size(mesh, a) for a in d]))
+    msize = axis_size(mesh, "model")
+    l_, b, s, hkv, hd = shape
+    spec: list = [None, None, None, None, None]
+    if b % dsize == 0 and dsize > 1:
+        spec[1] = d if len(d) > 1 else d[0]
+        if hkv % msize == 0:
+            spec[3] = "model"
+        else:
+            spec[2] = "model"           # glm4/gemma2/kimi GQA: shard seq
+    else:
+        # batch=1 long-context: shard sequence over everything useful
+        spec[2] = d if len(d) > 1 else d[0]
+        if hkv % msize == 0:
+            spec[3] = "model"
+    return P(*spec)
+
+
+def ssm_state_spec(cfg: ModelConfig, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """(L, B, G, Hg, N, P) SSD state: shard heads on model, batch on data."""
+    d = data_axes(mesh)
+    dsize = int(np.prod([axis_size(mesh, a) for a in d]))
+    spec: list = [None] * len(shape)
+    if len(shape) >= 2 and shape[1] % dsize == 0 and dsize > 1:
+        spec[1] = d if len(d) > 1 else d[0]
+    if len(shape) >= 4:
+        msize = axis_size(mesh, "model")
+        if shape[3] % msize == 0:
+            spec[3] = "model"
+    return P(*spec)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    d = data_axes(mesh)
+    return P(d if len(d) > 1 else (d[0] if d else None), None, "model")

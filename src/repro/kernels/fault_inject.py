@@ -1,0 +1,38 @@
+"""Pallas kernel: standalone bit-flip injection on int32/f32 tiles.
+
+Used when faults must be injected into tensors that do not flow through the
+fused ABFT GEMM (e.g. the f32 path of un-quantized layers in
+characterization sweeps). Elementwise xor; flip masks are generated
+functionally outside (core/fault.py) so injection stays reproducible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, flip_ref, o_ref):
+    bits = jax.lax.bitcast_convert_type(x_ref[...], jnp.uint32)
+    o_ref[...] = jax.lax.bitcast_convert_type(
+        jax.lax.bitwise_xor(bits, flip_ref[...]), x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def fault_inject(x: jax.Array, flips: jax.Array,
+                 bm: int = 128, bn: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """x: (M, N) int32 or f32; flips: (M, N) uint32 xor mask."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, flips)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def abft_matmul_ref(aq: jax.Array, bq: jax.Array, flips: jax.Array,
+                    bm: int, bn: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Reference for the fused faulty-ABFT GEMM.
+
+    aq: (M, K) int8, bq: (K, N) int8, flips: (M, N) uint32 xor mask applied
+    to the int32 accumulator (the DVFS timing-error injection).
+
+    Returns:
+      c_faulty : (M, N) int32  -- faulted accumulator
+      act_row  : (M, Nt) int32 -- per (row, col-block) sums of c_faulty
+      exp_row  : (M, Nt) int32 -- expected sums, A @ blocksum(B)
+      act_col  : (Mt, N) int32
+      exp_col  : (Mt, N) int32
+    All arithmetic wraps mod 2^32 (exact ABFT; see core/abft.py).
+    """
+    m, k = aq.shape
+    n = bq.shape[1]
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    mt, nt = m // bm, n // bn
+    a32 = aq.astype(jnp.int32)
+    b32 = bq.astype(jnp.int32)
+    c = a32 @ b32
+    c_faulty = jax.lax.bitcast_convert_type(
+        jax.lax.bitwise_xor(jax.lax.bitcast_convert_type(c, jnp.uint32), flips),
+        jnp.int32)
+
+    act_row = c_faulty.reshape(m, nt, bn).sum(axis=2)
+    exp_row = a32 @ b32.reshape(k, nt, bn).sum(axis=2)
+    act_col = c_faulty.reshape(mt, bm, n).sum(axis=1)
+    exp_col = a32.reshape(mt, bm, k).sum(axis=1) @ b32
+    return c_faulty, act_row, exp_row, act_col, exp_col
+
+
+def rollback_correct_ref(c: jax.Array, ckpt: jax.Array,
+                         row_diff: jax.Array, col_diff: jax.Array,
+                         threshold: int, bm: int, bn: int,
+                         union: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Reference for the rollback-correction kernel.
+
+    c, ckpt: (M, N) f32; row_diff: (M, Nt) int32; col_diff: (Mt, N) int32.
+    Returns (corrected, tile_flag (Mt, Nt) bool).
+    """
+    m, n = c.shape
+    mt, nt = row_diff.shape[1], None
+    nt = row_diff.shape[1]
+    mt = col_diff.shape[0]
+    thr = jnp.int32(threshold)
+    rflag = (row_diff >= thr) | (row_diff <= -thr)      # (M, Nt)
+    cflag = (col_diff >= thr) | (col_diff <= -thr)      # (Mt, N)
+    r_elem = jnp.repeat(rflag, bn, axis=1)              # (M, N)
+    c_elem = jnp.repeat(cflag, bm, axis=0)              # (M, N)
+    mask = (r_elem | c_elem) if union else (r_elem & c_elem)
+    corrected = jnp.where(mask, ckpt, c)
+    tile_flag = mask.reshape(mt, bm, nt, bn).any(axis=(1, 3))
+    return corrected, tile_flag
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a @ b

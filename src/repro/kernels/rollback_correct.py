@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: rollback correction (the recovery scheduler's splice).
+
+Consumes the per-tile checksum differences emitted by abft_matmul, builds the
+correction mask in-register (union or cross policy, Fig 10a) and overwrites
+masked positions of the dequantized GEMM output with the checkpointed values
+from a previous timestep (Sec 5.3 Step 3-4). Elementwise + broadcast only --
+the tile is VMEM-resident and the checkpoint tile arrives via its own
+BlockSpec stream (on hardware: the DMA the recovery scheduler coalesces).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(c_ref, ckpt_ref, rdiff_ref, cdiff_ref, thr_ref,
+            out_ref, flag_ref, *, union: bool):
+    thr = thr_ref[0]
+    rd = rdiff_ref[...]                      # (bm, 1) int32
+    cd = cdiff_ref[...]                      # (1, bn) int32
+    rflag = (rd >= thr) | (rd <= -thr)
+    cflag = (cd >= thr) | (cd <= -thr)
+    mask = (rflag | cflag) if union else (rflag & cflag)
+    out_ref[...] = jnp.where(mask, ckpt_ref[...], c_ref[...])
+    flag_ref[0, 0] = jnp.any(mask).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "union", "interpret"))
+def rollback_correct(c: jax.Array, ckpt: jax.Array,
+                     row_diff: jax.Array, col_diff: jax.Array,
+                     threshold: int,
+                     bm: int = 128, bn: int = 128,
+                     union: bool = True,
+                     interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """c, ckpt: (M, N) f32; row_diff: (M, Nt) int32; col_diff: (Mt, N) int32.
+
+    Returns (corrected (M, N) f32, tile_flag (Mt, Nt) int32).
+    """
+    m, n = c.shape
+    assert m % bm == 0 and n % bn == 0
+    mt, nt = m // bm, n // bn
+    thr = jnp.asarray([threshold], jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, union=union),
+        grid=(mt, nt),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), c.dtype),
+            jax.ShapeDtypeStruct((mt, nt), jnp.int32),
+        ),
+        interpret=interpret,
+    )(c, ckpt, row_diff, col_diff, thr)

@@ -1,0 +1,393 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production mesh, record memory/cost/collective analysis for the roofline.
+
+MUST be executed as a fresh process (jax locks the device count at first
+init):  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b \
+            --shape train_4k --mesh multi
+
+Writes one JSON per cell to experiments/dryrun/.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional, Tuple   # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.configs import shapes as shapes_lib  # noqa: E402
+from repro.distributed import constraints       # noqa: E402
+from repro.distributed import sharding as shd   # noqa: E402
+from repro.launch import hlo_analysis           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as tf_lib      # noqa: E402
+from repro.models.common import ModelConfig          # noqa: E402
+from repro.optim.adamw import OptimConfig            # noqa: E402
+from repro.perfmodel import flops as flops_lib       # noqa: E402
+from repro.train import steps as steps_lib           # noqa: E402
+
+# --------------------------------------------------------------- inputs
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ModelConfig, shape: shapes_lib.ShapeSpec, mesh
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        extra = 1 if shape.kind == "train" else 0
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                 jnp.float32, mesh,
+                                 shd.batch_spec((b, 1, 1), mesh))
+            out["tokens"] = _sds((b, s + extra), jnp.int32, mesh,
+                                 shd.batch_spec((b, s), mesh))
+        elif cfg.family == "vlm":
+            st = s - cfg.vis_tokens
+            out["vis_embeds"] = _sds((b, cfg.vis_tokens, cfg.d_model),
+                                     jnp.float32, mesh,
+                                     shd.batch_spec((b, 1, 1), mesh))
+            out["tokens"] = _sds((b, st + extra), jnp.int32, mesh,
+                                 shd.batch_spec((b, st), mesh))
+        else:
+            out["tokens"] = _sds((b, s + extra), jnp.int32, mesh,
+                                 shd.batch_spec((b, s), mesh))
+        return out
+    if shape.kind == "decode":
+        out["tokens"] = _sds((b, 1), jnp.int32, mesh,
+                             shd.batch_spec((b, 1), mesh))
+        return out
+    if shape.kind in ("denoise_train", "sample"):
+        ls, lc = cfg.latent_size, cfg.latent_channels
+        out["latents"] = _sds((b, ls, ls, lc), jnp.float32, mesh,
+                              shd.batch_spec((b, ls, ls, lc), mesh))
+        if cfg.cond_tokens:
+            out["text"] = _sds((b, cfg.cond_tokens, cfg.cond_dim),
+                               jnp.float32, mesh,
+                               shd.batch_spec((b, 1, 1), mesh))
+        else:
+            out["labels"] = _sds((b,), jnp.int32, mesh,
+                                 shd.batch_spec((b,), mesh))
+        return out
+    raise ValueError(shape.kind)
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+
+
+def _optim_cfg(cfg: ModelConfig) -> OptimConfig:
+    kind = "adafactor" if cfg.name in ("kimi-k2-1t-a32b",) else "adamw"
+    return OptimConfig(kind=kind, warmup_steps=100, total_steps=10_000)
+
+
+def _state_shardings(state_abs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, P()) if not s.shape
+        else None, state_abs)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, drift: bool = False,
+               shard_act_dmodel: bool = False, opt: str = ""):
+    """Build + lower + compile one (arch, shape) cell. Returns report dict.
+
+    opt: "" (baseline) | "windowed" (ring-buffer local attention)
+       | "dp_only" (replicate weights, batch over every mesh axis)
+       | "moe_sharded_dispatch" (constrain MoE dispatch shardings)
+    """
+    cfg = configs.get_config(arch)
+    shape = shapes_lib.get_shape(shape_name)
+    ocfg = _optim_cfg(cfg)
+    key = jax.random.PRNGKey(0)
+    dp_only = opt == "dp_only"
+    constraints.set_policy(constraints.MeshPolicy(
+        mesh, shard_act_dmodel=shard_act_dmodel, dp_over_all=dp_only))
+    t0 = time.time()
+
+    if shape.kind in ("train", "denoise_train"):
+        state_abs = jax.eval_shape(
+            lambda: steps_lib.init_train_state(cfg, ocfg, key))
+        if dp_only:   # replicate all weights/optimizer, pure DP
+            state_sh = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), state_abs)
+        else:
+            state_sh = shd.shardings_for(state_abs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        if dp_only:
+            axes = tuple(mesh.axis_names)
+            while axes and shape.global_batch % int(
+                    np.prod([mesh.shape[a] for a in axes])):
+                axes = axes[1:]
+            batch = {k: jax.ShapeDtypeStruct(
+                v.shape, v.dtype,
+                sharding=NamedSharding(mesh, P(axes, *([None] * (len(v.shape) - 1)))))
+                for k, v in batch.items()}
+        micro = 8 if opt == "microbatch" else 1
+        fn = steps_lib.make_train_step(cfg, ocfg, microbatches=micro)
+        jfn = jax.jit(fn,
+                      in_shardings=(state_sh, {k: v.sharding
+                                               for k, v in batch.items()}),
+                      out_shardings=(state_sh, None),
+                      donate_argnums=(0,))
+        lowered = jfn.lower(state_abs, batch)
+        n_params = sum(x.size for x in
+                       jax.tree_util.tree_leaves(state_abs.params))
+
+    elif shape.kind == "prefill":
+        params_abs = jax.eval_shape(
+            lambda: steps_lib.init_model_params(cfg, key))
+        params_sh = shd.shardings_for(params_abs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        fn = steps_lib.make_prefill_step(cfg, max_seq=shape.seq_len)
+        jfn = jax.jit(fn, in_shardings=(params_sh,
+                                        {k: v.sharding
+                                         for k, v in batch.items()}))
+        lowered = jfn.lower(params_abs, batch)
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params_abs))
+
+    elif shape.kind == "decode" and opt == "windowed":
+        # Hillclimb #1: ring-buffer windowed decode for local/global archs
+        assert tf_lib.supports_mixed_decode(cfg), cfg.name
+        params_abs = jax.eval_shape(
+            lambda: steps_lib.init_model_params(cfg, key))
+        params_sh = shd.shardings_for(params_abs, mesh)
+        b, s = shape.global_batch, shape.seq_len
+        cache_abs = jax.eval_shape(
+            lambda: tf_lib.init_mixed_cache(cfg, b, s))
+        cache_sh = _cache_shardings(cfg, cache_abs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        jfn = jax.jit(lambda p, c, t: tf_lib.decode_step_mixed(cfg, p, c, t),
+                      in_shardings=(params_sh, cache_sh,
+                                    batch["tokens"].sharding),
+                      out_shardings=(None, cache_sh),
+                      donate_argnums=(1,))
+        lowered = jfn.lower(params_abs, cache_abs, batch["tokens"])
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params_abs))
+
+    elif shape.kind == "decode":
+        params_abs = jax.eval_shape(
+            lambda: steps_lib.init_model_params(cfg, key))
+        params_sh = shd.shardings_for(params_abs, mesh)
+        b, s = shape.global_batch, shape.seq_len
+        if cfg.family == "encdec":
+            from repro.models import encdec as ed
+            mem_abs = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                           jnp.bfloat16)
+            cache_abs = jax.eval_shape(
+                lambda: ed.init_decode_cache(cfg, jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, x.dtype), params_abs),
+                    jnp.zeros(mem_abs.shape, mem_abs.dtype), s))
+        else:
+            cache_abs = jax.eval_shape(
+                lambda: tf_lib.init_cache(cfg, b, s))
+        cache_sh = _cache_shardings(cfg, cache_abs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        fn = steps_lib.make_decode_step(cfg)
+        jfn = jax.jit(fn, in_shardings=(params_sh, cache_sh,
+                                        batch["tokens"].sharding),
+                      out_shardings=(None, cache_sh),
+                      donate_argnums=(1,))
+        lowered = jfn.lower(params_abs, cache_abs, batch["tokens"])
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params_abs))
+
+    elif shape.kind == "sample" and opt == "drift":
+        # The paper's system at pod scale: one denoising step with INT8
+        # quant + fault injection + ABFT + tile rollback on every GEMM.
+        # Proves DRIFT's scale-out property: rollback stores shard like
+        # activations; detection/correction are shard-local.
+        from repro.core.exec_ctx import DriftSystemConfig
+        from repro.diffusion import schedule as sched_lib
+        from repro.models import dit as dit_lib
+        import dataclasses as _dc
+        params_abs = jax.eval_shape(
+            lambda: steps_lib.init_model_params(cfg, key))
+        params_sh = shd.shardings_for(params_abs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        b = shape.global_batch
+        stores_abs = jax.eval_shape(
+            lambda: dit_lib.drift_store_spec(cfg, b))
+        dp = shd.data_axes(mesh)
+        dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+        def store_sh(leaf):
+            spec = [None] * len(leaf.shape)
+            for dim, sz in enumerate(leaf.shape):
+                if sz % max(shd.axis_size(mesh, "data"), 1) == 0 and \
+                        dim == len(leaf.shape) - 2:
+                    spec[dim] = dp
+                    break
+            return NamedSharding(mesh, P(*spec))
+        stores_sh = jax.tree.map(store_sh, stores_abs)
+        sched = sched_lib.DdpmSchedule.default(1000)
+        scfg = DriftSystemConfig(mode="drift")
+
+        def drift_step(params, latents, t, cond, embed_store, block_store):
+            ds = dit_lib.DriftState(
+                cfg=scfg, key=jax.random.PRNGKey(0), step=t,
+                ber_by_class=jnp.array([0.0, 0.0, 3e-3], jnp.float32),
+                embed_store=embed_store, block_store=block_store,
+                have_ckpt=True)
+            tt = jnp.full((latents.shape[0],), t, jnp.float32)
+            if cfg.cond_tokens:
+                eps, nds, _ = dit_lib.forward(cfg, params, latents, tt,
+                                              None, text=cond, drift=ds)
+            else:
+                eps, nds, _ = dit_lib.forward(cfg, params, latents, tt,
+                                              cond, drift=ds)
+            lat2 = sched.ddim_step(latents, eps, t, t - 1)
+            return lat2, nds.embed_store, nds.block_store
+
+        cond = batch.get("text", batch.get("labels"))
+        jfn = jax.jit(drift_step,
+                      in_shardings=(params_sh, batch["latents"].sharding,
+                                    NamedSharding(mesh, P()), cond.sharding,
+                                    stores_sh[0], stores_sh[1]),
+                      out_shardings=(batch["latents"].sharding,
+                                     stores_sh[0], stores_sh[1]),
+                      donate_argnums=(4, 5))
+        lowered = jfn.lower(params_abs, batch["latents"],
+                            jax.ShapeDtypeStruct((), jnp.int32), cond,
+                            stores_abs[0], stores_abs[1])
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params_abs))
+
+    elif shape.kind == "sample":
+        params_abs = jax.eval_shape(
+            lambda: steps_lib.init_model_params(cfg, key))
+        params_sh = shd.shardings_for(params_abs, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        fn = steps_lib.make_denoise_step(cfg)
+        cond = batch.get("text", batch.get("labels"))
+        jfn = jax.jit(fn, in_shardings=(params_sh, batch["latents"].sharding,
+                                        NamedSharding(mesh, P()),
+                                        cond.sharding))
+        lowered = jfn.lower(params_abs, batch["latents"],
+                            jax.ShapeDtypeStruct((), jnp.int32), cond)
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params_abs))
+    else:
+        raise ValueError(shape.kind)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)}
+    except Exception as e:   # CPU backend may not support it
+        mem_d = {"error": str(e)}
+    # Scan-aware per-device analysis (cost_analysis counts loop bodies once)
+    t1 = time.time()
+    hlo_text = compiled.as_text()
+    hlo = hlo_analysis.analyze(hlo_text)
+    t_analyze = time.time() - t1
+    hlo_dir = os.environ.get("DRYRUN_HLO_DIR")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        mesh_tag = "x".join(str(v) for v in mesh.shape.values())
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch}_{shape_name}_{mesh_tag}.hlo.gz"),
+                "wt") as f:
+            f.write(hlo_text)
+
+    mf = flops_lib.cell_flops(cfg, shape)
+    report = {
+        "opt": opt,
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.shape.values()), "axes": list(mesh.axis_names),
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "drift": drift,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_analyze, 2),
+        "hlo_flops_per_device": hlo["flops"],
+        "hlo_bytes_per_device": hlo["bytes"],
+        "collective_bytes_per_device": hlo["collective_bytes"],
+        "collectives": hlo["collectives"],
+        "collective_ops_executed": hlo["collective_ops_executed"],
+        "xla_cost_flops_body_once": cost.get("flops"),
+        "xla_cost_bytes_body_once": cost.get("bytes accessed"),
+        "memory_analysis": mem_d,
+        "n_params": int(n_params),
+        "model_flops": mf["model_flops"],
+        "tokens": mf["tokens"],
+    }
+    return report
+
+
+def _cache_shardings(cfg: ModelConfig, cache_abs, mesh):
+    """NamedTuple fields flatten positionally, so dispatch on rank:
+    rank-5 = KV caches (L/N, B, S|W, Hkv, hd) -> cache_spec (seq/head
+    sharding with GQA fallbacks); rank-6 = SSD state -> ssm_state_spec;
+    anything else -> batch-dim sharding / replicate."""
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 5:
+            return NamedSharding(mesh, shd.cache_spec(cfg, leaf.shape, mesh))
+        if nd >= 4:
+            return NamedSharding(mesh,
+                                 shd.ssm_state_spec(cfg, leaf.shape, mesh))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, cache_abs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opt", default="",
+                    help="optimization variant (windowed|dp_only|...)")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    os.makedirs(args.out, exist_ok=True)
+    archs = configs.ALL_ARCHS if args.arch == "all" else [args.arch]
+    failures = []
+    for arch in archs:
+        cells = (shapes_lib.cells_for(arch) if args.shape == "all"
+                 else [args.shape])
+        for cell in cells:
+            suffix = f"_{args.opt}" if args.opt else ""
+            tag = f"{arch}_{cell}_{args.mesh}{suffix}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                with mesh:
+                    rep = lower_cell(arch, cell, mesh, opt=args.opt)
+                with open(path, "w") as f:
+                    json.dump(rep, f, indent=1)
+                print(f"  ok: flops/dev={rep['hlo_flops_per_device']:.3e} "
+                      f"compile={rep['compile_s']}s "
+                      f"coll_ops={rep['collective_ops_executed']}", flush=True)
+            except Exception as e:
+                failures.append((tag, str(e)[:200]))
+                print(f"  FAIL: {e}", flush=True)
+    if failures:
+        print("\nFAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("all cells passed")
+
+
+if __name__ == "__main__":
+    main()

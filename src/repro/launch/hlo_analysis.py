@@ -1,0 +1,343 @@
+"""Scan-aware HLO analysis: FLOPs / bytes / collective traffic with loop
+trip-count attribution.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE (verified: an
+8-iteration scan of 128^3 matmuls reports 4.19e6 flops, not 3.36e7), so for
+scan-over-layers models it undercounts by ~n_layers x. This module parses
+the post-SPMD HLO text into computations, builds a global symbol table
+(op name -> result type; operand types are not inline in compiled HLO),
+detects each while loop's trip count from its condition's comparison
+constant, propagates multipliers through the call graph (while bodies x
+trip, fusion/call/reduce subcomputations x parent, conditional branches x
+parent -- both branches counted, i.e. lax.cond upper bound), and sums:
+
+  * flops            -- 2*N_out*K per dot; convs via output x kernel volume
+  * bytes            -- per top-level op: operand + result bytes (fusion
+                        internals excluded => approximates fused traffic)
+  * collective bytes -- result-shape bytes per all-reduce / all-gather /
+                        reduce-scatter / all-to-all / collective-permute
+
+All numbers are PER DEVICE (the SPMD-partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$")
+
+
+def _shape_dims(types: str) -> List[Tuple[str, List[int]]]:
+    return [(m.group(1), [int(d) for d in m.group(2).split(",") if d])
+            for m in _SHAPE_RE.finditer(types)]
+
+
+def _bytes_of(types: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(types):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_types: str
+    kind: str
+    rest: str            # operands + attributes (everything after '(')
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    fusion_subs: List[str] = dataclasses.field(default_factory=list)
+
+
+def parse_computations(hlo: str
+                       ) -> Tuple[Dict[str, Computation], Dict[str, str], str]:
+    comps: Dict[str, Computation] = {}
+    symtab: Dict[str, str] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        hdr = _COMP_HDR.match(s)
+        if hdr and "->" in s:
+            cur = Computation(hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, res, kind, rest = m.groups()
+        op = Op(name, res.strip(), kind, rest)
+        cur.ops.append(op)
+        symtab[name] = res.strip()
+        if kind == "while":
+            body = re.search(r"body=%?([\w.\-]+)", rest)
+            cond = re.search(r"condition=%?([\w.\-]+)", rest)
+            known = re.search(r'known_trip_count.....n.:.(\d+)', rest)
+            if body and cond:
+                cur.whiles.append((body.group(1), cond.group(1),
+                                   int(known.group(1)) if known else 0))
+        for cm in re.finditer(
+                r"(?:calls|to_apply)=%?([\w.\-]+)", rest):
+            target = cm.group(1)
+            cur.calls.append(target)
+            if kind == "fusion":
+                cur.fusion_subs.append(target)
+        bm = re.search(r"branch_computations=\{([^}]*)\}", rest)
+        if bm:
+            for b in re.split(r",\s*", bm.group(1)):
+                cur.calls.append(b.strip().lstrip("%"))
+        for key in ("true_computation", "false_computation"):
+            km = re.search(key + r"=%?([\w.\-]+)", rest)
+            if km:
+                cur.calls.append(km.group(1))
+    return comps, symtab, entry
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop bound from the condition computation's constants."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.match(r"(\d+)\)?", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str
+                 ) -> Tuple[Dict[str, float], set]:
+    mult: Dict[str, float] = {entry: 1.0}
+    fusion_subs: set = set()
+    stack = [entry]
+    visited = set()
+    while stack:
+        name = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        key = (name, mult.get(name, 1.0))
+        if key in visited:
+            continue
+        visited.add(key)
+        m = mult.get(name, 1.0)
+        for body, cond, known in comp.whiles:
+            t = known if known > 0 else trip_count(comps, cond)
+            for c in (body, cond):
+                if m * t > mult.get(c, 0.0):
+                    mult[c] = m * t
+                    stack.append(c)
+        for callee in comp.calls:
+            if m > mult.get(callee, 0.0):
+                mult[callee] = m
+                stack.append(callee)
+        fusion_subs.update(comp.fusion_subs)
+    return mult, fusion_subs
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Names inside the top-level parens of 'a, %b), attrs...'."""
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    for m in re.finditer(r"%([\w.\-]+)", cur):
+        out.append(m.group(1))
+    return out
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    opnds = _operand_names(op.rest)
+    if not opnds:
+        return 0.0
+    lhs_t = symtab.get(opnds[0], "")
+    lhs = _shape_dims(lhs_t)
+    out = _shape_dims(op.result_types)
+    if not lhs or not out:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if m:
+        for d in m.group(1).split(","):
+            if d:
+                k *= lhs[0][1][int(d)]
+    n_out = 1
+    for d in out[0][1]:
+        n_out *= d
+    return 2.0 * n_out * k
+
+
+def _conv_flops(op: Op, symtab: Dict[str, str]) -> float:
+    opnds = _operand_names(op.rest)
+    out = _shape_dims(op.result_types)
+    if len(opnds) < 2 or not out:
+        return 0.0
+    kern = _shape_dims(symtab.get(opnds[1], ""))
+    if not kern:
+        return 0.0
+    n_out = 1
+    for d in out[0][1]:
+        n_out *= d
+    vol = 1
+    for d in kern[0][1]:
+        vol *= d
+    feat = kern[0][1][-1] if kern[0][1] else 1
+    groups = 1
+    g = re.search(r"feature_group_count=(\d+)", op.rest)
+    if g:
+        groups = int(g.group(1))
+    return 2.0 * n_out * max(vol // max(feat, 1), 1) / 1.0 / max(groups, 1) \
+        * max(groups, 1) / max(groups, 1)
+
+
+# Byte accounting approximates TPU behaviour where elementwise chains fuse
+# into neighbours (CPU HLO leaves them as separate wrapped fusions, which
+# would overcount HBM traffic ~10x). We charge only ops that genuinely
+# touch HBM-resident tensors:
+#   dot/conv          operands + result
+#   gather/dyn-slice  result (the read volume; MoE dispatch, embed lookup)
+#   dyn-update-slice  update operand only (in-place on TPU; the big buffer
+#                     read is charged by its consumer dot)
+#   scatter           updates + result write
+#   reduce/sort/copy/transpose/concatenate  read + write once
+_BYTES_FULL = {"dot", "convolution"}
+_BYTES_RESULT = {"gather", "dynamic-slice"}
+_BYTES_RW = {"copy", "transpose", "concatenate", "sort", "reverse", "pad"}
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, symtab, entry = parse_computations(hlo)
+    if not entry:
+        entry = next(iter(comps), "")
+    mult, fusion_subs = _multipliers(comps, entry)
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+    n_coll = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name)
+        if m is None:
+            continue          # unreachable computation
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, symtab)
+            elif op.kind == "convolution":
+                flops += m * _conv_flops(op, symtab)
+            if op.kind in COLLECTIVE_KINDS or \
+               op.kind.rstrip("-start") in COLLECTIVE_KINDS:
+                kind = op.kind.replace("-start", "")
+                if kind in COLLECTIVE_KINDS:
+                    b = _bytes_of(op.result_types)
+                    coll[kind] += m * b
+                    n_coll += m
+            opnds = None
+            if op.kind in _BYTES_FULL:
+                opnds = _operand_names(op.rest)
+                b = _bytes_of(op.result_types)
+                for o in opnds:
+                    b += _bytes_of(symtab.get(o, ""))
+                bytes_ += m * b
+            elif op.kind in _BYTES_RESULT:
+                bytes_ += m * _bytes_of(op.result_types)
+            elif op.kind == "dynamic-update-slice":
+                opnds = _operand_names(op.rest)
+                if len(opnds) >= 2:
+                    bytes_ += m * _bytes_of(symtab.get(opnds[1], ""))
+            elif op.kind == "scatter":
+                opnds = _operand_names(op.rest)
+                b = _bytes_of(op.result_types)
+                if len(opnds) >= 3:
+                    b += _bytes_of(symtab.get(opnds[2], ""))
+                bytes_ += m * b
+            elif op.kind in _BYTES_RW:
+                bytes_ += m * 2 * _bytes_of(op.result_types)
+            elif op.kind == "reduce":
+                opnds = _operand_names(op.rest)
+                b = _bytes_of(op.result_types)
+                if opnds:
+                    b += _bytes_of(symtab.get(opnds[0], ""))
+                bytes_ += m * b
+    return {
+        "flops": flops,
+        "bytes": bytes_,
+        "collective_bytes": sum(coll.values()),
+        "collectives": coll,
+        "collective_ops_executed": n_coll,
+    }
+
+
+def top_ops(hlo: str, n: int = 15, kinds=("dot", "convolution")
+            ) -> List[Tuple[float, float, str, str]]:
+    """Debug: (total_flops, multiplier, result_type, op_name) heaviest ops."""
+    comps, symtab, entry = parse_computations(hlo)
+    mult, _ = _multipliers(comps, entry or next(iter(comps), ""))
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name)
+        if m is None:
+            continue
+        for op in comp.ops:
+            if op.kind not in kinds:
+                continue
+            f = (_dot_flops(op, symtab) if op.kind == "dot"
+                 else _conv_flops(op, symtab))
+            rows.append((m * f, m, op.result_types, f"{name}/{op.name}"))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def top_collectives(hlo: str, n: int = 15
+                    ) -> List[Tuple[float, float, str, str]]:
+    comps, symtab, entry = parse_computations(hlo)
+    mult, _ = _multipliers(comps, entry or next(iter(comps), ""))
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name)
+        if m is None:
+            continue
+        for op in comp.ops:
+            kind = op.kind.replace("-start", "")
+            if kind in COLLECTIVE_KINDS:
+                rows.append((m * _bytes_of(op.result_types), m,
+                             op.result_types[:60], f"{kind}:{name}/{op.name}"))
+    rows.sort(reverse=True)
+    return rows[:n]

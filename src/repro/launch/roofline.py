@@ -1,0 +1,115 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md Sec Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run's scan-aware HLO
+analysis (launch/hlo_analysis.py):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw    (50 GB/s/link)
+
+The dominant term is the bottleneck; roofline fraction = compute term /
+max(all terms) (how close the cell runs to compute-bound peak).
+MODEL_FLOPS / (HLO_FLOPs x devices) measures how much compiled compute is
+"useful" (remat / capacity-factor / padding waste shows up here).
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.perfmodel.hw import TPU_V5E
+
+
+def roofline_row(rep: Dict) -> Dict:
+    peak = TPU_V5E.peak_flops_bf16
+    hbm = TPU_V5E.hbm_bytes_per_s
+    link = TPU_V5E.ici_bytes_per_s_per_link
+
+    t_comp = (rep["hlo_flops_per_device"] or 0) / peak
+    t_mem = (rep["hlo_bytes_per_device"] or 0) / hbm
+    t_coll = (rep["collective_bytes_per_device"] or 0) / link
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total_hlo = (rep["hlo_flops_per_device"] or 0) * rep["n_devices"]
+    useful = rep["model_flops"] / total_hlo if total_hlo else 0.0
+    frac = t_comp / bound if bound > 0 else 0.0
+    return {
+        "arch": rep["arch"], "shape": rep["shape"],
+        "mesh": "x".join(str(m) for m in rep["mesh"]),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": frac,
+        "useful_flops_ratio": useful,
+        "model_flops": rep["model_flops"],
+        "hlo_flops_per_device": rep["hlo_flops_per_device"],
+        "collective_gb": (rep["collective_bytes_per_device"] or 0) / 1e9,
+        "compile_s": rep.get("compile_s"),
+    }
+
+
+_ADVICE = {
+    "compute": ("drop the remat/useful-FLOPs gap (selective checkpointing) "
+                "or cut padded/wasted GEMM work (MoE capacity, head padding)"),
+    "memory": ("shrink the working set: bf16 carries, windowed KV "
+               "(ring buffers for local layers), fuse elementwise chains"),
+    "collective": ("reshard: move the all-gathered operand's axis, overlap "
+                   "collectives with the layer scan, or compress payloads"),
+}
+
+
+def advice(row: Dict) -> str:
+    return _ADVICE[row["dominant"]]
+
+
+def load_rows(dir_: str, mesh: str = "") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        if mesh and not path.endswith(f"_{mesh}.json"):
+            continue
+        rows.append(roofline_row(rep))
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | roofline frac | useful FLOPs |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                 f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+                 f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+                 f"| {r['roofline_fraction']:.2f} "
+                 f"| {r['useful_flops_ratio']:.2f} |\n")
+    return hdr + body
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.dir, args.mesh)
+    if args.markdown:
+        print(to_markdown(rows))
+        return
+    for r in rows:
+        print(f"{r['arch']:18s} {r['shape']:14s} {r['mesh']:8s} "
+              f"C={r['t_compute_s']:.2e} M={r['t_memory_s']:.2e} "
+              f"X={r['t_collective_s']:.2e} dom={r['dominant'][:4]} "
+              f"frac={r['roofline_fraction']:.2f} "
+              f"useful={r['useful_flops_ratio']:.2f}")
+        print(f"    -> {advice(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Attention: GQA, sliding windows, softcap, chunked (online-softmax) path.
+
+Three execution paths, all mask-equivalent:
+  * ``full_attention``    -- plain einsum, for short sequences.
+  * ``chunked_attention`` -- lax.scan over query/KV chunks with an online
+    softmax (flash-attention recurrence in pure XLA). Memory is
+    O(q_chunk x kv_chunk) per (batch, head) instead of O(S^2); this is what
+    makes the 32k-prefill dry-run cells lowerable at batch 32.
+  * ``decode_attention``  -- single-token query against a KV cache.
+
+GQA never materializes repeated KV heads: queries are reshaped to
+(B, S, Hkv, G, D) and contracted group-wise.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softcap
+
+NEG_INF = -2.0e38
+
+
+def _mask(pos_q: jax.Array, pos_k: jax.Array, causal: bool,
+          window) -> jax.Array:
+    """(Sq, Sk) boolean validity mask. window<=0 or None -> unbounded."""
+    m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        m &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        m &= jnp.where(w > 0,
+                       pos_q[:, None] - pos_k[None, :] < w,
+                       True)
+    return m
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True,
+                   window=None,
+                   attn_softcap: float = 0.0,
+                   q_offset: jax.Array | int = 0,
+                   kv_valid_len=None) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, attn_softcap)
+    pos_q = jnp.asarray(q_offset) + jnp.arange(sq)
+    pos_k = jnp.arange(sk)
+    m = _mask(pos_q, pos_k, causal, window)
+    if kv_valid_len is not None:
+        m &= (pos_k < kv_valid_len)[None, :]
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window=None,
+                      attn_softcap: float = 0.0,
+                      q_chunk: int = 512,
+                      kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax blockwise attention (pure XLA flash recurrence)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0, (sq, sk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = d ** -0.5
+
+    qg = q.reshape(b, nq, q_chunk, hkv, g, d)
+    kc = k.reshape(b, nk, kv_chunk, hkv, d)
+    vc = v.reshape(b, nk, kv_chunk, hkv, d)
+
+    def q_block(qi_and_q):
+        qi, qb = qi_and_q                       # qb: (b, q_chunk, hkv, g, d)
+        pos_q = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_and_kv):
+            m_prev, l_prev, acc = carry
+            kj, (kb, vb) = kj_and_kv
+            pos_k = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            s = softcap(s, attn_softcap)
+            msk = _mask(pos_q, pos_k, causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(s - m_cur[..., None])
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))))
+        out = acc / jnp.maximum(l_f, 1e-37)[..., None]
+        return jnp.einsum("bkgqd->bqkgd", out)    # (b, q_chunk, hkv, g, d)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     pos: jax.Array,
+                     window=None,
+                     attn_softcap: float = 0.0) -> jax.Array:
+    """One-token query vs cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, Hkv, D); pos: scalar int32 --
+    the index the current token occupies (entries > pos are invalid).
+    """
+    b, _, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scale = d ** -0.5
+    # contract in the cache's native dtype with f32 accumulation -- casting
+    # the cache to f32 first materializes a full-cache copy (2x reads + 2x
+    # HBM at 500k context; see EXPERIMENTS.md Perf hillclimb #1 iter 2)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(k_cache.dtype), k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, attn_softcap)
+    pos_k = jnp.arange(s)
+    valid = pos_k <= pos
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        valid &= jnp.where(w > 0, pos - pos_k < w, True)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def decode_attention_ring(q: jax.Array, k_ring: jax.Array, v_ring: jax.Array,
+                          *, pos: jax.Array,
+                          attn_softcap: float = 0.0) -> jax.Array:
+    """One-token query vs a WINDOW-SIZED ring-buffer cache.
+
+    k_ring/v_ring: (B, W, Hkv, D) where slot s holds the KV of the most
+    recent position p with p % W == s. All resident entries are inside the
+    window by construction, so the only masking needed is ring fill level
+    (slots > pos are empty until the first wrap).
+
+    This is the production memory layout for local-attention layers
+    (gemma-style sliding window): O(W) reads per step instead of O(S).
+    """
+    b, _, h, d = q.shape
+    w, hkv = k_ring.shape[1], k_ring.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scale = d ** -0.5
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(k_ring.dtype), k_ring,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, attn_softcap)
+    valid = jnp.where(pos >= w, True, jnp.arange(w) <= pos)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_ring.dtype), v_ring,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_any(q, k, v, *, causal=True, window=None, attn_softcap=0.0,
+                  chunk_threshold: int = 4096,
+                  q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """Dispatch: plain einsum for short S, chunked flash path for long S."""
+    sq, sk = q.shape[1], k.shape[1]
+    if max(sq, sk) <= chunk_threshold or sq % q_chunk or sk % kv_chunk:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              attn_softcap=attn_softcap)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             attn_softcap=attn_softcap,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)

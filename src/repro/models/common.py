@@ -1,0 +1,235 @@
+"""Shared model machinery: configs, norms, RoPE, inits, activation dtypes.
+
+One ``ModelConfig`` covers every assigned architecture family; fields unused
+by a family default to inert values. Layer parameters are plain nested dicts
+(pure JAX, no flax); stacked layers carry a leading L axis and run under
+``jax.lax.scan`` with optional remat -- the production pattern that keeps
+HLO size O(1) in depth for the 512-chip dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | dit | unet
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # --- attention pattern ---
+    attn_pattern: Tuple[str, ...] = ("global",)   # cycled over layers
+    global_layer_indices: Tuple[int, ...] = ()    # force-global layers (hymba)
+    window: int = 1024               # sliding-window size for 'local' layers
+    logit_softcap: float = 0.0       # gemma2-style final-logit softcap
+    attn_softcap: float = 0.0        # gemma2-style attention-logit softcap
+    norm: str = "rmsnorm"            # rmsnorm | layernorm | nonparam_ln
+    act: str = "silu"                # silu | gelu
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+    # --- enc-dec (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0             # stub frame count (whisper: 1500)
+    cross_attention: bool = False
+    # --- VLM ---
+    vis_tokens: int = 0              # stub patch-embedding count
+    # --- DiT / UNet (diffusion) ---
+    latent_size: int = 0             # spatial latent (e.g. 64 for 512px f8)
+    latent_channels: int = 4
+    patch_size: int = 2
+    cond_dim: int = 0                # text-conditioning width (0 = class-cond)
+    cond_tokens: int = 0             # text tokens for cross-attn (PixArt/SD)
+    unet_channels: Tuple[int, ...] = ()
+    num_classes: int = 0
+    # --- execution ---
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer attention kind, cycling attn_pattern over depth."""
+        p = self.attn_pattern
+        kinds = [p[i % len(p)] for i in range(self.n_layers)]
+        for i in self.global_layer_indices:
+            kinds[i % self.n_layers] = "global"
+        return tuple(kinds)
+
+    def layer_windows(self) -> Tuple[int, ...]:
+        """Per-layer window (0 = unbounded/global)."""
+        return tuple(0 if k == "global" else self.window
+                     for k in self.layer_kinds())
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.d_model * self.ssm_expand) // self.ssm_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.d_model * self.ssm_expand
+
+
+# ----------------------------------------------------------------- inits
+def trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    return trunc_normal(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return trunc_normal(key, (vocab, d), 1.0, dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: Optional[jax.Array],
+              bias: Optional[jax.Array], eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: Optional[Params], x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, None if p is None else p.get("scale"))
+    if cfg.norm == "layernorm":
+        return layernorm(x, None if p is None else p.get("scale"),
+                         None if p is None else p.get("bias"))
+    if cfg.norm == "nonparam_ln":   # OLMo: non-parametric LayerNorm
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+def norm_params(cfg: ModelConfig, key) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.param_dtype)}
+    return {}  # nonparam_ln
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(cfg.act)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------- scanning
+def stack_layer_params(init_one, n_layers: int, key) -> Params:
+    """vmap a single-layer init over depth -> leading L axis on every leaf."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_layers(body, x, stacked_params: Params, xs_extra=None,
+                remat: bool = True, unroll: bool = False):
+    """Run ``body(x, layer_params, extra) -> (x, ys)`` over stacked layers.
+
+    ``xs_extra`` is an optional pytree with leading L axis (per-layer masks,
+    KV-cache slices, drift-state slices...). Returns (x, stacked_ys).
+    """
+    if unroll:
+        n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        ys_all = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], stacked_params)
+            e_i = (None if xs_extra is None
+                   else jax.tree.map(lambda a: a[i], xs_extra))
+            x, ys = body(x, p_i, e_i)
+            ys_all.append(ys)
+        stacked = (jax.tree.map(lambda *a: jnp.stack(a), *ys_all)
+                   if ys_all and ys_all[0] is not None else None)
+        return x, stacked
+
+    def step(carry, per_layer):
+        p_i, e_i = per_layer
+        y, ys = body(carry, p_i, e_i)
+        return y, ys
+
+    fn = jax.checkpoint(step) if remat else step
+    x, ys = jax.lax.scan(fn, x, (stacked_params, xs_extra))
+    return x, ys
+
+
+def count_params(params: Params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

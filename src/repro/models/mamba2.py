@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD, state-space duality) blocks: chunked scan + decode recurrence.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; within a chunk the recurrence is evaluated as a masked
+attention-like quadratic form (MXU-friendly), across chunks a (cheap) linear
+recurrence carries the (H, N, P) state. Decode is the O(1) per-token
+recurrence -- which is what makes mamba2/hymba the archs that run the
+long_500k cell.
+
+DRIFT note (DESIGN.md Sec 4): in/out projections are GEMMs and get
+ABFT+rollback; the SSD scan itself is not a GEMM and carries persistent
+state, so it is classified error-sensitive and runs at the nominal operating
+point.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig, Params, dense_init
+
+
+class SsmState(NamedTuple):
+    h: jax.Array           # (B, G, Hg, N, P) recurrent state
+    conv: jax.Array        # (B, convw-1, conv_ch) causal-conv tail
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    cch = conv_channels(cfg)
+    proj_out = 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + nh
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, cfg.param_dtype),
+        "conv_w": common.trunc_normal(ks[1], (cfg.ssm_conv_width, cch),
+                                      cfg.ssm_conv_width ** -0.5,
+                                      cfg.param_dtype),
+        "conv_b": jnp.zeros((cch,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 1e-2, jnp.float32))),
+        "norm_scale": jnp.zeros((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[5], di, d, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal 1-D conv. x: (B, S, C); w: (W, C); tail: (B, W-1, C)."""
+    cw, c = w.shape
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp, w.astype(x.dtype).reshape(cw, 1, c),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, gn = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + 1e-6)
+            * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def ssd_forward(cfg: ModelConfig, p: Params, x: jax.Array,
+                return_state: bool = False
+                ) -> Tuple[jax.Array, Optional[SsmState]]:
+    """Chunked SSD over a full sequence. x: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    nh, hp, ng, ns = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups,
+                      cfg.ssm_state)
+    hg = nh // ng
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    di = cfg.d_inner
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc_conv = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    xs = xbc_conv[..., :di]
+    bc = xbc_conv[..., di:]
+    b_ssm = bc[..., :ng * ns].reshape(b, s, ng, ns).astype(jnp.float32)
+    c_ssm = bc[..., ng * ns:].reshape(b, s, ng, ns).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                     # (B, S, nh)
+    a_neg = -jnp.exp(p["A_log"])                             # (nh,)
+    da = dt * a_neg                                          # (B, S, nh) <= 0
+
+    xh = xs.reshape(b, s, nh, hp).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                 # (B, S, nh, hp)
+
+    if pad:
+        z_pad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        da, xdt = z_pad(da), z_pad(xdt)
+        b_ssm, c_ssm = z_pad(b_ssm), z_pad(c_ssm)
+    sp = s + pad
+    nc = sp // q
+
+    # reshape to chunks, heads grouped (ng, hg)
+    da_c = da.reshape(b, nc, q, ng, hg)
+    xdt_c = xdt.reshape(b, nc, q, ng, hg, hp)
+    b_c = b_ssm.reshape(b, nc, q, ng, ns)
+    c_c = c_ssm.reshape(b, nc, q, ng, ns)
+
+    l = jnp.cumsum(da_c, axis=2)                             # inclusive
+    l_t = jnp.moveaxis(l, 2, -1)                             # (B,nc,ng,hg,Q)
+    l_last = l_t[..., -1:]                                   # (B,nc,ng,hg,1)
+
+    # within-chunk quadratic form
+    diff = l_t[..., :, None] - l_t[..., None, :]             # (…,Q_t,Q_s)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    m_seg = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", c_c, b_c)
+    y_intra = jnp.einsum("bcgqs,bcghqs,bcsghp->bcqghp", cb, m_seg, xdt_c)
+
+    # chunk states + linear recurrence across chunks
+    decay_to_end = jnp.exp(l_last - l_t)                     # (B,nc,ng,hg,Q)
+    state_c = jnp.einsum("bcsgn,bcghs,bcsghp->bcghnp", b_c, decay_to_end,
+                         xdt_c)
+    chunk_decay = jnp.exp(l_last[..., 0])                    # (B,nc,ng,hg)
+
+    def chunk_step(h, inp):
+        dec, st = inp
+        h_out = h                                            # state BEFORE chunk
+        h = dec[..., None, None] * h + st
+        return h, h_out
+
+    h0 = jnp.zeros((b, ng, hg, ns, hp), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_c, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                          # (B,nc,ng,hg,ns,hp)
+
+    decay_from_start = jnp.exp(l_t)                          # (B,nc,ng,hg,Q)
+    y_inter = jnp.einsum("bcqgn,bcghq,bcghnp->bcqghp", c_c, decay_from_start,
+                         h_in)
+
+    y = (y_intra + y_inter).reshape(b, sp, nh, hp)[:, :s]
+    y = y + p["D"][None, None, :, None] * xh[:, :s]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(x.dtype)
+
+    state = None
+    if return_state:
+        cw = cfg.ssm_conv_width
+        tail = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
+        state = SsmState(h=h_final, conv=tail)
+    return out, state
+
+
+def ssd_decode_step(cfg: ModelConfig, p: Params, x: jax.Array,
+                    state: SsmState) -> Tuple[jax.Array, SsmState]:
+    """One-token recurrence. x: (B, 1, d) -> (B, 1, d)."""
+    b = x.shape[0]
+    nh, hp, ng, ns = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups,
+                      cfg.ssm_state)
+    hg = nh // ng
+    di = cfg.d_inner
+    cw = cfg.ssm_conv_width
+
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)                # (B,1,·)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    win = jnp.concatenate([state.conv.astype(x.dtype), xbc], axis=1)  # (B,cw,C)
+    conv_out = (jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                           p["conv_w"].astype(jnp.float32))
+                + p["conv_b"].astype(jnp.float32))
+    xbc_t = jax.nn.silu(conv_out)                            # (B, C)
+    new_conv = win[:, 1:]
+
+    xs = xbc_t[:, :di].reshape(b, ng, hg, hp)
+    b_t = xbc_t[:, di:di + ng * ns].reshape(b, ng, ns)
+    c_t = xbc_t[:, di + ng * ns:].reshape(b, ng, ns)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp((dt * -jnp.exp(p["A_log"]))).reshape(b, ng, hg)
+    xdt = xs * dt.reshape(b, ng, hg)[..., None]
+
+    h = (a[..., None, None] * state.h
+         + jnp.einsum("bgn,bghp->bghnp", b_t, xdt))
+    y = jnp.einsum("bgn,bghnp->bghp", c_t, h)
+    y = y + p["D"].reshape(ng, hg)[None, :, :, None] * xs
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SsmState(h=h, conv=new_conv)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SsmState:
+    ng, hg = cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups
+    return SsmState(
+        h=jnp.zeros((batch, ng, hg, cfg.ssm_state, cfg.ssm_head_dim),
+                    jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)),
+                       dtype))

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based dispatch, EP-ready.
+
+Sort-based dispatch (no (T, E) one-hot einsum): token->expert assignments
+are ranked inside each expert via argsort + searchsorted, dropped beyond
+capacity, scattered into (E, C, d) slots, processed by a dense batched
+expert GEMM (honest FLOPs ~= top_k * capacity_factor * T * d * ff, unlike
+masked-all-experts implementations), and combined back with router weights.
+
+Sharding: the expert dimension E shards on the 'model' mesh axis (expert
+parallelism); the token scatter/gather becomes the dispatch all-to-all under
+GSPMD. Covers kimi-k2 (384 routed, top-8) and deepseek-moe (2 shared + 64
+routed, top-6) -- shared experts run as a plain dense gated FFN on all
+tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.models import common
+from repro.models.common import ModelConfig, Params, dense_init
+
+
+def init_moe_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 7)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept f32
+        "w_gate": common.trunc_normal(ks[1], (e, d, f), d ** -0.5, cfg.param_dtype),
+        "w_up": common.trunc_normal(ks[2], (e, d, f), d ** -0.5, cfg.param_dtype),
+        "w_down": common.trunc_normal(ks[3], (e, f, d), f ** -0.5, cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, fs, cfg.param_dtype),
+            "w_up": dense_init(ks[5], d, fs, cfg.param_dtype),
+            "w_down": dense_init(ks[6], fs, d, cfg.param_dtype),
+        }
+    return p
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, d) -> (y: (T, d), aux_loss: scalar). Pure function."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = max(int(cfg.capacity_factor * t * k / e), 1)
+    # round capacity so the slot tensor's C dim can shard over the data axis
+    capacity = -(-capacity // 64) * 64
+
+    # router matmul in the activation dtype (bf16 MXU pass), f32 softmax:
+    # casting x itself to f32 materializes + all-reduces a full-width f32
+    # (T, d) tensor per layer (hillclimb #2 iter 4)
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                  # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank within expert (sort-based; no T x E one-hot) ----
+    flat_e = top_i.reshape(-1)                              # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)                   # (T*k,)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    run_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(t * k) - run_start
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < capacity
+
+    # dropped tokens scatter zeros into slot 0 (safe: .add of zeros), so the
+    # slot tensor needs no +1 overflow row and can shard cleanly.
+    slot = jnp.where(keep, flat_e * capacity + rank, 0)
+    x_rep = constrain(x[flat_t], "tokens2d")                # (T*k, d)
+    dispatched = jnp.zeros((e * capacity, d), x.dtype)
+    # Anchor BOTH sides of the scatter: tokens stay dp-sharded, the flat
+    # slot space is expert-major and shards on 'model' -- GSPMD lowers the
+    # scatter into the dispatch all-to-all (hillclimb #2).
+    dispatched = constrain(dispatched, "slots2d")
+    dispatched = dispatched.at[slot].add(x_rep * keep[:, None].astype(x.dtype))
+    dispatched = constrain(dispatched, "slots2d")
+    xd = constrain(dispatched.reshape(e, capacity, d), "experts")
+
+    # ---- dense expert GEMMs (EP shards the leading E axis) ----
+    gate = jnp.einsum("ecd,edf->ecf", xd, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("ecd,edf->ecf", xd, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    ye = constrain(ye, "experts")
+
+    # ---- combine ----
+    y_flat = constrain(ye.reshape(e * capacity, d), "slots2d")
+    gathered = jnp.where(keep[:, None], y_flat[slot],
+                         jnp.zeros((1, d), x.dtype))
+    gathered = constrain(gathered, "tokens2d")
+    y = jnp.zeros((t, d), x.dtype).at[flat_t].add(
+        gathered * flat_w[:, None].astype(x.dtype))
+    y = constrain(y, "tokens2d")
+
+    # ---- shared experts (always-on dense path) ----
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        g = jax.nn.silu((x @ sp["w_gate"].astype(x.dtype)).astype(jnp.float32))
+        y = y + (g.astype(x.dtype) * (x @ sp["w_up"].astype(x.dtype))
+                 ) @ sp["w_down"].astype(x.dtype)
+
+    # ---- load-balance aux loss (Switch-style) ----
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[flat_e].add(
+        keep.astype(jnp.float32)) / jnp.maximum(keep.sum(), 1.0)
+    mean_prob = probs.mean(axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_prob)
+    return y, aux
+
+
+def moe_param_count(cfg: ModelConfig) -> int:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    n = e * (3 * d * f) + d * e
+    if cfg.n_shared_experts:
+        n += 3 * d * f * cfg.n_shared_experts
+    return n

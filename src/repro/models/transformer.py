@@ -1,0 +1,581 @@
+"""Unified decoder LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+One parameter schema + three execution paths (train forward, prefill,
+decode) driven entirely by ``ModelConfig``:
+
+  dense   -- gemma3-27b, gemma2-9b, olmo-1b, glm4-9b (GQA, local/global
+             patterns, softcaps, non-parametric LN)
+  moe     -- kimi-k2 (384e top-8), deepseek-moe (2 shared + 64e top-6)
+  ssm     -- mamba2-370m (attention-free SSD blocks)
+  hybrid  -- hymba-1.5b (parallel attention + SSM heads per layer)
+  vlm     -- internvl2-76b (stub patch embeddings prepended to the stream)
+
+Layers are stacked (leading L axis) and run under lax.scan with remat;
+per-layer heterogeneity (window sizes, rope on/off) rides along as scan xs,
+so the traced HLO stays O(1) in depth -- required for the 512-chip
+multi-pod dry-run to lower/compile in reasonable time.
+
+DRIFT integration: ``decode_step(..., drift=...)`` threads the rollback
+checkpoint store (stacked per layer) through the scan and routes every
+projection GEMM through an ExecContext; see core/exec_ctx.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvfs
+from repro.core.exec_ctx import DriftSystemConfig, ExecContext
+from repro.distributed.constraints import constrain
+from repro.models import attention, common, mamba2, moe
+from repro.models.common import (ModelConfig, Params, apply_norm, dense_init,
+                                 embed_init, norm_params)
+
+
+# ============================================================ parameters
+def _init_attn(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    return {
+        "wq": dense_init(ks[0], d, h * hd, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, cfg.param_dtype),
+        "wo": dense_init(ks[3], h * hd, d, cfg.param_dtype),
+    }
+
+
+def _init_mlp(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": dense_init(ks[0], d, f, cfg.param_dtype),
+        "w_up": dense_init(ks[1], d, f, cfg.param_dtype),
+        "w_down": dense_init(ks[2], f, d, cfg.param_dtype),
+    }
+
+
+def init_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {"ln1": norm_params(cfg, ks[0])}
+    if cfg.family == "ssm":
+        p["ssm"] = mamba2.init_ssm_params(cfg, ks[1])
+        return p
+    p["attn"] = _init_attn(cfg, ks[1])
+    p["ln2"] = norm_params(cfg, ks[2])
+    if cfg.family == "moe":
+        p["moe"] = moe.init_moe_params(cfg, ks[3])
+    else:
+        p["mlp"] = _init_mlp(cfg, ks[3])
+    if cfg.family == "hybrid":
+        p["ssm"] = mamba2.init_ssm_params(cfg, ks[4])
+        p["mix_attn"] = jnp.ones((), jnp.float32)
+        p["mix_ssm"] = jnp.ones((), jnp.float32)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    k_embed, k_layers, k_final, k_head = jax.random.split(key, 4)
+    p: Params = {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": common.stack_layer_params(
+            lambda k: init_layer(cfg, k), cfg.n_layers, k_layers),
+        "final_norm": norm_params(cfg, k_final),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab,
+                                  cfg.param_dtype)
+    return p
+
+
+# ============================================================== caching
+class Cache(NamedTuple):
+    k: Optional[jax.Array]          # (L, B, S, Hkv, hd)
+    v: Optional[jax.Array]
+    ssm: Optional[mamba2.SsmState]  # leaves stacked (L, ...)
+    pos: jax.Array                  # scalar int32: next write index
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Cache:
+    k = v = None
+    if cfg.family != "ssm":
+        shape = (cfg.n_layers, batch, max_seq, cfg.kv_heads, cfg.hd)
+        k, v = jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+    ssm = None
+    if cfg.family in ("ssm", "hybrid"):
+        one = mamba2.init_ssm_state(cfg, batch, dtype)
+        ssm = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+    return Cache(k, v, ssm, jnp.int32(0))
+
+
+# ====================================================== layer primitives
+def _proj(ctx: Optional[ExecContext], x, w, name, rclass):
+    if ctx is None:
+        return x @ w.astype(x.dtype)
+    return ctx.matmul(x, w.astype(x.dtype), name=name, rclass=rclass)
+
+
+def _attn_block(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                window, positions, mode: str,
+                cache_kv=None, cache_pos=None,
+                ctx: Optional[ExecContext] = None, rclass=dvfs.CLASS_BODY):
+    """Self-attention sub-block. mode: 'full' | 'prefill' | 'decode'."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = _proj(ctx, x, p["wq"], "attn.q", rclass).reshape(b, s, h, hd)
+    k = _proj(ctx, x, p["wk"], "attn.k", rclass).reshape(b, s, hkv, hd)
+    v = _proj(ctx, x, p["wv"], "attn.v", rclass).reshape(b, s, hkv, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    new_kv = None
+    if mode == "full":
+        o = attention.attention_any(q, k, v, causal=True, window=window,
+                                    attn_softcap=cfg.attn_softcap)
+    elif mode == "prefill":
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        new_kv = (ck, cv)
+        o = attention.attention_any(q, k, v, causal=True, window=window,
+                                    attn_softcap=cfg.attn_softcap)
+    elif mode == "decode":
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        new_kv = (ck, cv)
+        o = attention.decode_attention(q, ck, cv, pos=cache_pos,
+                                       window=window,
+                                       attn_softcap=cfg.attn_softcap)
+    else:
+        raise ValueError(mode)
+    o = o.reshape(b, s, h * hd)
+    return _proj(ctx, o, p["wo"], "attn.o", rclass), new_kv
+
+
+def _mlp_block(cfg: ModelConfig, p: Params, x: jax.Array,
+               ctx: Optional[ExecContext] = None, rclass=dvfs.CLASS_BODY):
+    g = _proj(ctx, x, p["w_gate"], "mlp.gate", rclass)
+    u = _proj(ctx, x, p["w_up"], "mlp.up", rclass)
+    h = common.activation(cfg, g.astype(jnp.float32)).astype(x.dtype) * u
+    return _proj(ctx, h, p["w_down"], "mlp.down", rclass)
+
+
+def _layer(cfg: ModelConfig, p: Params, x: jax.Array, *,
+           window, positions, mode: str,
+           cache_kv=None, cache_pos=None, ssm_state=None,
+           ctx: Optional[ExecContext] = None, rclass=dvfs.CLASS_BODY):
+    """One transformer/SSM/hybrid layer. Returns (x, new_kv, new_ssm, aux)."""
+    aux = jnp.float32(0.0)
+    h_in = apply_norm(cfg, p["ln1"], x)
+    new_kv, new_ssm = None, None
+
+    if cfg.family == "ssm":
+        if mode == "decode":
+            y, new_ssm = mamba2.ssd_decode_step(cfg, p["ssm"], h_in, ssm_state)
+        else:
+            y, new_ssm = mamba2.ssd_forward(cfg, p["ssm"], h_in,
+                                            return_state=(mode == "prefill"))
+        return x + y, new_kv, new_ssm, aux
+
+    attn_out, new_kv = _attn_block(cfg, p["attn"], h_in, window=window,
+                                   positions=positions, mode=mode,
+                                   cache_kv=cache_kv, cache_pos=cache_pos,
+                                   ctx=ctx, rclass=rclass)
+    if cfg.family == "hybrid":
+        if mode == "decode":
+            ssm_out, new_ssm = mamba2.ssd_decode_step(cfg, p["ssm"], h_in,
+                                                      ssm_state)
+        else:
+            ssm_out, new_ssm = mamba2.ssd_forward(
+                cfg, p["ssm"], h_in, return_state=(mode == "prefill"))
+        # hymba: mean of per-branch-normalized outputs, learnable scales
+        attn_n = common.rmsnorm(attn_out, None) * p["mix_attn"].astype(x.dtype)
+        ssm_n = common.rmsnorm(ssm_out, None) * p["mix_ssm"].astype(x.dtype)
+        x = x + 0.5 * (attn_n + ssm_n)
+    else:
+        x = x + attn_out
+
+    h2 = apply_norm(cfg, p["ln2"], x)
+    if cfg.family == "moe":
+        t = h2.shape[0] * h2.shape[1]
+        y2, aux = moe.moe_ffn(cfg, p["moe"], h2.reshape(t, -1))
+        y2 = y2.reshape(h2.shape)
+    else:
+        y2 = _mlp_block(cfg, p["mlp"], h2, ctx=ctx, rclass=rclass)
+    return x + y2, new_kv, new_ssm, aux
+
+
+# ========================================================== full forward
+def _window_xs(cfg: ModelConfig) -> jax.Array:
+    return jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array,
+           vis_embeds: Optional[jax.Array]) -> jax.Array:
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    if vis_embeds is not None:
+        x = jnp.concatenate([vis_embeds.astype(cfg.dtype), x], axis=1)
+    return constrain(x, "act")
+
+
+def _unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    logits = constrain(logits, "logits")
+    return common.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            vis_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training/teacher-forcing pass. Returns (logits_f32, aux_loss)."""
+    x = _embed(cfg, params, tokens, vis_embeds)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    def body(xc, p_i, win):
+        y, _, _, aux = _layer(cfg, p_i, xc, window=win, positions=positions,
+                              mode="full")
+        return constrain(y, "act"), aux
+
+    x, auxs = common.scan_layers(body, x, params["layers"],
+                                 xs_extra=_window_xs(cfg),
+                                 remat=cfg.remat,
+                                 unroll=not cfg.scan_layers)
+    x = apply_norm(cfg, params["final_norm"], x)
+    aux = jnp.mean(auxs) if auxs is not None else jnp.float32(0.0)
+    return _unembed(cfg, params, x), aux
+
+
+# ================================================================ serving
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            max_seq: int, vis_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Cache]:
+    """Process a prompt; returns (logits (B, S, V) f32, primed cache)."""
+    x = _embed(cfg, params, tokens, vis_embeds)
+    b, s, _ = x.shape
+    cache = init_cache(cfg, b, max_seq, cfg.dtype)
+    positions = jnp.arange(s)
+
+    def body(xc, p_i, extra):
+        win, kv_i, ssm_i = extra
+        y, new_kv, new_ssm, _ = _layer(cfg, p_i, xc, window=win,
+                                       positions=positions, mode="prefill",
+                                       cache_kv=kv_i, ssm_state=ssm_i)
+        return constrain(y, "act"), (new_kv, new_ssm)
+
+    xs = (_window_xs(cfg),
+          (cache.k, cache.v) if cache.k is not None else None,
+          cache.ssm)
+    x, ys = common.scan_layers(body, x, params["layers"], xs_extra=xs,
+                               remat=cfg.remat, unroll=not cfg.scan_layers)
+    new_kv, new_ssm = ys
+    k, v = (new_kv if new_kv is not None else (None, None))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x), Cache(k, v, new_ssm, jnp.int32(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftDecode:
+    """Static config + per-step dynamic inputs for DRIFT-protected decode."""
+    cfg: DriftSystemConfig
+    key: jax.Array
+    ber_by_class: jax.Array        # (N_CLASSES,)
+    store: Dict[str, jax.Array]    # stacked (L, ...) checkpoint store
+    step: jax.Array                # decode step (drives interval/rollback)
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                tokens: jax.Array,
+                drift: Optional[DriftDecode] = None
+                ) -> Tuple[jax.Array, Cache, Optional[Dict[str, jax.Array]]]:
+    """One decode step. tokens: (B, 1). Returns (logits, cache, drift_store)."""
+    x = _embed(cfg, params, tokens, None)
+    positions = jnp.full((1,), cache.pos, jnp.int32)
+
+    def body(carry, p_i, extra):
+        xc, layer_idx = carry
+        win, kv_i, ssm_i, store_i = extra
+        ctx = None
+        if drift is not None:
+            rclass = jnp.where(layer_idx < 1, dvfs.CLASS_FIRST_BLOCK,
+                               dvfs.CLASS_BODY)
+            ctx = ExecContext(drift.cfg,
+                              key=jax.random.fold_in(drift.key, layer_idx),
+                              step=drift.step,
+                              ber_by_class=drift.ber_by_class,
+                              state_in=store_i,
+                              have_ckpt=drift.step > 0)
+        else:
+            rclass = dvfs.CLASS_BODY
+        y, new_kv, new_ssm, _ = _layer(cfg, p_i, xc, window=win,
+                                       positions=positions, mode="decode",
+                                       cache_kv=kv_i, cache_pos=cache.pos,
+                                       ssm_state=ssm_i, ctx=ctx,
+                                       rclass=rclass)
+        out_store = ctx.state_out if ctx is not None else None
+        return (constrain(y, "act"), layer_idx + 1), (new_kv, new_ssm,
+                                                      out_store)
+
+    xs = (_window_xs(cfg),
+          (cache.k, cache.v) if cache.k is not None else None,
+          cache.ssm,
+          drift.store if drift is not None else None)
+
+    def body2(x_and_i, p_i, extra):
+        return body(x_and_i, p_i, extra)
+
+    (x, _), ys = common.scan_layers(body2, (x, jnp.int32(0)),
+                                    params["layers"], xs_extra=xs,
+                                    remat=False,
+                                    unroll=not cfg.scan_layers)
+    new_kv, new_ssm, new_store = ys
+    k, v = (new_kv if new_kv is not None else (None, None))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, Cache(k, v, new_ssm, cache.pos + 1), new_store
+
+
+# ================================================== windowed decode (opt)
+#
+# Perf-optimized decode for local/global interleaved architectures
+# (gemma3 5:1, gemma2 1:1): local layers keep a WINDOW-SIZED ring-buffer
+# cache and attend O(window) instead of masked-O(S). Layers are scanned in
+# pattern cycles (params reshaped (n_cycles, cycle, ...)) with the cycle
+# unrolled in the body, so each layer's window is STATIC and the HLO stays
+# O(cycle) in size. Leftover layers (62 = 10x6 + 2 for gemma3) run
+# unrolled. See EXPERIMENTS.md Sec Perf, hillclimb #1.
+
+class MixedCache(NamedTuple):
+    k_local: jax.Array    # (n_local, B, W, Hkv, hd) ring buffers
+    v_local: jax.Array
+    k_global: jax.Array   # (n_global, B, S, Hkv, hd)
+    v_global: jax.Array
+    pos: jax.Array
+
+
+def mixed_layout(cfg: ModelConfig):
+    """(cycle_kinds, n_cycles, tail_kinds, local_idx, global_idx)."""
+    kinds = cfg.layer_kinds()
+    cycle = len(cfg.attn_pattern)
+    n_cycles = cfg.n_layers // cycle
+    tail = kinds[n_cycles * cycle:]
+    local_idx = [i for i, k in enumerate(kinds) if k == "local"]
+    global_idx = [i for i, k in enumerate(kinds) if k == "global"]
+    return (cfg.attn_pattern, n_cycles, tail, local_idx, global_idx)
+
+
+def supports_mixed_decode(cfg: ModelConfig) -> bool:
+    kinds = cfg.layer_kinds()
+    return (cfg.family == "dense" and "local" in kinds and cfg.window > 0
+            and not cfg.global_layer_indices)
+
+
+def init_mixed_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16) -> MixedCache:
+    _, _, _, local_idx, global_idx = mixed_layout(cfg)
+    w = cfg.window
+    shape_l = (len(local_idx), batch, w, cfg.kv_heads, cfg.hd)
+    shape_g = (len(global_idx), batch, max_seq, cfg.kv_heads, cfg.hd)
+    return MixedCache(jnp.zeros(shape_l, dtype), jnp.zeros(shape_l, dtype),
+                      jnp.zeros(shape_g, dtype), jnp.zeros(shape_g, dtype),
+                      jnp.int32(0))
+
+
+def mixed_from_full(cfg: ModelConfig, cache: Cache) -> MixedCache:
+    """Convert a full prefill cache into the windowed layout (ring-aligned:
+    position p lands in slot p % W)."""
+    _, _, _, local_idx, global_idx = mixed_layout(cfg)
+    w = cfg.window
+    pos = cache.pos
+    s = cache.k.shape[2]
+
+    def ring(full):  # (B, S, Hkv, hd) -> (B, W, Hkv, hd)
+        start = jnp.clip(pos - w, 0, s - w)
+        sl_k = jax.lax.dynamic_slice_in_dim(full, start, w, axis=1)
+        # entry i holds position start+i -> slot (start+i) % W
+        shift = start % w
+        return jnp.roll(sl_k, shift, axis=1)
+
+    kl = jnp.stack([ring(cache.k[i]) for i in local_idx]) if local_idx \
+        else jnp.zeros((0,))
+    vl = jnp.stack([ring(cache.v[i]) for i in local_idx]) if local_idx \
+        else jnp.zeros((0,))
+    kg = jnp.stack([cache.k[i] for i in global_idx])
+    vg = jnp.stack([cache.v[i] for i in global_idx])
+    return MixedCache(kl, vl, kg, vg, pos)
+
+
+def _mixed_layer(cfg: ModelConfig, p, x, *, kind: str, positions, pos,
+                 kv_ring=None, kv_full=None):
+    """One decode layer with a static local/global kind."""
+    h_in = apply_norm(cfg, p["ln1"], x)
+    b, s, d = x.shape
+    hh, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    ap = p["attn"]
+    q = (h_in @ ap["wq"].astype(x.dtype)).reshape(b, s, hh, hd)
+    k = (h_in @ ap["wk"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    v = (h_in @ ap["wv"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    if kind == "local":
+        ck, cv = kv_ring
+        slot = pos % cfg.window
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        o = attention.decode_attention_ring(q, ck, cv, pos=pos,
+                                            attn_softcap=cfg.attn_softcap)
+        new_kv = (ck, cv)
+    else:
+        ck, cv = kv_full
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        o = attention.decode_attention(q, ck, cv, pos=pos, window=None,
+                                       attn_softcap=cfg.attn_softcap)
+        new_kv = (ck, cv)
+    x = x + (o.reshape(b, s, hh * hd) @ ap["wo"].astype(x.dtype))
+    h2 = apply_norm(cfg, p["ln2"], x)
+    x = x + _mlp_block(cfg, p["mlp"], h2)
+    return constrain(x, "act"), new_kv
+
+
+def decode_step_mixed(cfg: ModelConfig, params: Params, cache: MixedCache,
+                      tokens: jax.Array) -> Tuple[jax.Array, MixedCache]:
+    """Windowed decode: pattern-cycle scan, ring buffers for local layers."""
+    pattern, n_cycles, tail, local_idx, global_idx = mixed_layout(cfg)
+    cycle = len(pattern)
+    n_loc_c = sum(1 for k in pattern if k == "local")
+    n_glo_c = cycle - n_loc_c
+    pos = cache.pos
+    x = _embed(cfg, params, tokens, None)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def split_cycles(a):
+        return jax.tree.map(
+            lambda t: t[: n_cycles * cycle].reshape((n_cycles, cycle)
+                                                    + t.shape[1:]), a)
+
+    p_cycles = split_cycles(params["layers"])
+    p_tail = jax.tree.map(lambda t: t[n_cycles * cycle:], params["layers"])
+    kl = cache.k_local[: n_cycles * n_loc_c].reshape(
+        (n_cycles, n_loc_c) + cache.k_local.shape[1:])
+    vl = cache.v_local[: n_cycles * n_loc_c].reshape(
+        (n_cycles, n_loc_c) + cache.v_local.shape[1:])
+    kg = cache.k_global[: n_cycles * n_glo_c].reshape(
+        (n_cycles, n_glo_c) + cache.k_global.shape[1:])
+    vg = cache.v_global[: n_cycles * n_glo_c].reshape(
+        (n_cycles, n_glo_c) + cache.v_global.shape[1:])
+
+    def body(xc, p_c, extra):
+        kl_c, vl_c, kg_c, vg_c = extra
+        li = gi = 0
+        new_l, new_g = [], []
+        for j, kind in enumerate(pattern):
+            p_j = jax.tree.map(lambda t: t[j], p_c)
+            if kind == "local":
+                xc, (nk, nv) = _mixed_layer(
+                    cfg, p_j, xc, kind="local", positions=positions,
+                    pos=pos, kv_ring=(kl_c[li], vl_c[li]))
+                new_l.append((nk, nv))
+                li += 1
+            else:
+                xc, (nk, nv) = _mixed_layer(
+                    cfg, p_j, xc, kind="global", positions=positions,
+                    pos=pos, kv_full=(kg_c[gi], vg_c[gi]))
+                new_g.append((nk, nv))
+                gi += 1
+        ys = (jnp.stack([t[0] for t in new_l]) if new_l else kl_c,
+              jnp.stack([t[1] for t in new_l]) if new_l else vl_c,
+              jnp.stack([t[0] for t in new_g]) if new_g else kg_c,
+              jnp.stack([t[1] for t in new_g]) if new_g else vg_c)
+        return xc, ys
+
+    x, ys = common.scan_layers(body, x, p_cycles,
+                               xs_extra=(kl, vl, kg, vg), remat=False)
+    nkl, nvl, nkg, nvg = ys
+    nkl = nkl.reshape((n_cycles * n_loc_c,) + cache.k_local.shape[1:])
+    nvl = nvl.reshape((n_cycles * n_loc_c,) + cache.v_local.shape[1:])
+    nkg = nkg.reshape((n_cycles * n_glo_c,) + cache.k_global.shape[1:])
+    nvg = nvg.reshape((n_cycles * n_glo_c,) + cache.v_global.shape[1:])
+
+    # tail layers (pattern remainder), unrolled
+    li = n_cycles * n_loc_c
+    gi = n_cycles * n_glo_c
+    tail_l, tail_g = [], []
+    for j, kind in enumerate(tail):
+        p_j = jax.tree.map(lambda t: t[j], p_tail)
+        if kind == "local":
+            x, (nk, nv) = _mixed_layer(cfg, p_j, x, kind="local",
+                                       positions=positions, pos=pos,
+                                       kv_ring=(cache.k_local[li],
+                                                cache.v_local[li]))
+            tail_l.append((nk, nv))
+            li += 1
+        else:
+            x, (nk, nv) = _mixed_layer(cfg, p_j, x, kind="global",
+                                       positions=positions, pos=pos,
+                                       kv_full=(cache.k_global[gi],
+                                                cache.v_global[gi]))
+            tail_g.append((nk, nv))
+            gi += 1
+    if tail_l:
+        nkl = jnp.concatenate([nkl, jnp.stack([t[0] for t in tail_l])])
+        nvl = jnp.concatenate([nvl, jnp.stack([t[1] for t in tail_l])])
+    if tail_g:
+        nkg = jnp.concatenate([nkg, jnp.stack([t[0] for t in tail_g])])
+        nvg = jnp.concatenate([nvg, jnp.stack([t[1] for t in tail_g])])
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, MixedCache(nkl, nvl, nkg, nvg, pos + 1)
+
+
+def drift_store_spec(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    """Zero-init stacked checkpoint store for DRIFT-protected decode."""
+    d, h, hkv, hd, f = (cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd,
+                        cfg.d_ff)
+    m = batch  # one token per decode step
+    def z(nout):
+        return jnp.zeros((cfg.n_layers, m, nout), jnp.float32)
+    store = {
+        "attn.q": z(h * hd), "attn.k": z(hkv * hd), "attn.v": z(hkv * hd),
+        "attn.o": z(d),
+    }
+    if cfg.family != "moe":
+        store.update({"mlp.gate": z(f), "mlp.up": z(f), "mlp.down": z(d)})
+    return store
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytical parameter count (drives MODEL_FLOPS in the roofline)."""
+    d, h, hkv, hd, f, v = (cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd,
+                           cfg.d_ff, cfg.vocab)
+    per_layer = 0
+    if cfg.family != "ssm":
+        per_layer += d * h * hd + 2 * d * hkv * hd + h * hd * d
+    if cfg.family == "moe":
+        per_layer += moe.moe_param_count(cfg)
+    elif cfg.family != "ssm":
+        per_layer += 3 * d * f
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.d_inner
+        per_layer += d * (2 * di + 2 * cfg.ssm_groups * cfg.ssm_state
+                          + cfg.ssm_heads) + di * d
+    n = cfg.n_layers * per_layer + v * d
+    if not cfg.tie_embeddings:
+        n += v * d
+    return n

@@ -1,0 +1,206 @@
+"""Conditional latent UNet (Stable-Diffusion v1.5 family backbone).
+
+ResBlocks (GroupNorm + SiLU + 3x3 conv) with timestep injection, self- +
+cross-attention at the lower resolutions, down/up path with skip
+connections. Channel widths/config come from ModelConfig.unet_channels.
+Convolutions stay un-protected under DRIFT (the paper's accelerator maps
+GEMMs; SD's conv layers are lowered to implicit GEMM on the systolic array
+-- we charge them in the perfmodel but route only the attention/projection
+GEMMs through ExecContext, the dominant FLOPs at latent resolution).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvfs
+from repro.core.exec_ctx import ExecContext
+from repro.distributed.constraints import constrain
+from repro.models import attention, common
+from repro.models.common import ModelConfig, Params, dense_init
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    return common.trunc_normal(key, (kh, kw, cin, cout), fan_in ** -0.5,
+                               dtype)
+
+
+def _conv(x, w, b=None, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def group_norm(x: jax.Array, scale, bias, groups: int = 32) -> jax.Array:
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = xf.var(axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    xf = xf.reshape(b, h, w, c)
+    return (xf * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _init_res(cfg, key, cin, cout):
+    ks = jax.random.split(key, 4)
+    return {
+        "gn1_s": jnp.ones((cin,), cfg.param_dtype),
+        "gn1_b": jnp.zeros((cin,), cfg.param_dtype),
+        "conv1": _conv_init(ks[0], 3, 3, cin, cout, cfg.param_dtype),
+        "temb_w": dense_init(ks[1], cfg.d_model, cout, cfg.param_dtype),
+        "gn2_s": jnp.ones((cout,), cfg.param_dtype),
+        "gn2_b": jnp.zeros((cout,), cfg.param_dtype),
+        "conv2": _conv_init(ks[2], 3, 3, cout, cout, cfg.param_dtype),
+        "skip": (_conv_init(ks[3], 1, 1, cin, cout, cfg.param_dtype)
+                 if cin != cout else None),
+    }
+
+
+def _res_block(cfg, p, x, temb):
+    h = jax.nn.silu(group_norm(x, p["gn1_s"], p["gn1_b"]).astype(jnp.float32)
+                    ).astype(x.dtype)
+    h = _conv(h, p["conv1"])
+    h = h + (jax.nn.silu(temb.astype(jnp.float32)).astype(x.dtype)
+             @ p["temb_w"].astype(x.dtype))[:, None, None, :]
+    h = jax.nn.silu(group_norm(h, p["gn2_s"], p["gn2_b"]).astype(jnp.float32)
+                    ).astype(x.dtype)
+    h = _conv(h, p["conv2"])
+    skip = x if p["skip"] is None else _conv(x, p["skip"])
+    return skip + h
+
+
+def _init_attnblock(cfg, key, ch):
+    ks = jax.random.split(key, 9)
+    return {
+        "gn_s": jnp.ones((ch,), cfg.param_dtype),
+        "gn_b": jnp.zeros((ch,), cfg.param_dtype),
+        "self": {"wq": dense_init(ks[0], ch, ch, cfg.param_dtype),
+                 "wk": dense_init(ks[1], ch, ch, cfg.param_dtype),
+                 "wv": dense_init(ks[2], ch, ch, cfg.param_dtype),
+                 "wo": dense_init(ks[3], ch, ch, cfg.param_dtype)},
+        "cross": {"wq": dense_init(ks[4], ch, ch, cfg.param_dtype),
+                  "wk": dense_init(ks[5], cfg.cond_dim, ch, cfg.param_dtype),
+                  "wv": dense_init(ks[6], cfg.cond_dim, ch, cfg.param_dtype),
+                  "wo": dense_init(ks[7], ch, ch, cfg.param_dtype)},
+    }
+
+
+def _proj(ctx, x, w, name, rclass):
+    if ctx is None:
+        return x @ w.astype(x.dtype)
+    lead = x.shape[:-1]
+    y = ctx.matmul(x.reshape(-1, x.shape[-1]), w.astype(x.dtype),
+                   name=name, rclass=rclass)
+    return y.reshape(*lead, -1)
+
+
+def _attn_block(cfg, p, x, text, ctx=None, name="", rclass=dvfs.CLASS_BODY):
+    b, hh, ww, c = x.shape
+    heads = max(c // 64, 1)
+    hd = c // heads
+    xn = group_norm(x, p["gn_s"], p["gn_b"]).reshape(b, hh * ww, c)
+
+    def mha(pp, q_src, kv_src, tag):
+        q = _proj(ctx, q_src, pp["wq"], f"{name}.{tag}.q", rclass
+                  ).reshape(b, -1, heads, hd)
+        k = _proj(ctx, kv_src, pp["wk"], f"{name}.{tag}.k", rclass
+                  ).reshape(b, -1, heads, hd)
+        v = _proj(ctx, kv_src, pp["wv"], f"{name}.{tag}.v", rclass
+                  ).reshape(b, -1, heads, hd)
+        o = attention.full_attention(q, k, v, causal=False)
+        return _proj(ctx, o.reshape(b, -1, heads * hd), pp["wo"],
+                     f"{name}.{tag}.o", rclass)
+
+    y = xn + mha(p["self"], xn, xn, "self")
+    if text is not None:
+        y = y + mha(p["cross"], y, text.astype(x.dtype), "cross")
+    return x + y.reshape(b, hh, ww, c)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    chans = cfg.unet_channels            # e.g. (320, 640, 1280)
+    ks = iter(jax.random.split(key, 64))
+    d = cfg.d_model                      # timestep-embedding width
+    p: Params = {
+        "t_w1": dense_init(next(ks), 256, d, cfg.param_dtype),
+        "t_w2": dense_init(next(ks), d, d, cfg.param_dtype),
+        "conv_in": _conv_init(next(ks), 3, 3, cfg.latent_channels, chans[0],
+                              cfg.param_dtype),
+        "down": [], "mid": {}, "up": [],
+        "gn_out_s": jnp.ones((chans[0],), cfg.param_dtype),
+        "gn_out_b": jnp.zeros((chans[0],), cfg.param_dtype),
+        "conv_out": jnp.zeros((3, 3, chans[0], cfg.latent_channels),
+                              cfg.param_dtype),
+    }
+    cin = chans[0]
+    for li, ch in enumerate(chans):
+        level = {"res1": _init_res(cfg, next(ks), cin, ch),
+                 "res2": _init_res(cfg, next(ks), ch, ch),
+                 "attn": (_init_attnblock(cfg, next(ks), ch)
+                          if li >= 1 else None),
+                 "down": (_conv_init(next(ks), 3, 3, ch, ch, cfg.param_dtype)
+                          if li < len(chans) - 1 else None)}
+        p["down"].append(level)
+        cin = ch
+    p["mid"] = {"res1": _init_res(cfg, next(ks), cin, cin),
+                "attn": _init_attnblock(cfg, next(ks), cin),
+                "res2": _init_res(cfg, next(ks), cin, cin)}
+    for li, ch in enumerate(reversed(chans)):
+        level = {"res1": _init_res(cfg, next(ks), cin + ch, ch),
+                 "res2": _init_res(cfg, next(ks), ch, ch),
+                 "attn": (_init_attnblock(cfg, next(ks), ch)
+                          if li < len(chans) - 1 else None),
+                 "up": (_conv_init(next(ks), 3, 3, ch, ch, cfg.param_dtype)
+                        if li < len(chans) - 1 else None)}
+        p["up"].append(level)
+        cin = ch
+    return p
+
+
+def forward(cfg: ModelConfig, params: Params, latents: jax.Array,
+            t: jax.Array, text: Optional[jax.Array],
+            ctx: Optional[ExecContext] = None) -> jax.Array:
+    """Predict noise. latents (B,H,W,C); t (B,); text (B, Tt, cond_dim)."""
+    from repro.models.dit import timestep_embedding
+    x = latents.astype(cfg.dtype)
+    temb = timestep_embedding(t).astype(cfg.dtype)
+    temb = jax.nn.silu((temb @ params["t_w1"].astype(temb.dtype)
+                        ).astype(jnp.float32)).astype(cfg.dtype)
+    temb = temb @ params["t_w2"].astype(temb.dtype)
+
+    x = constrain(_conv(x, params["conv_in"]), "act")
+    skips: List[jax.Array] = []
+    for li, lvl in enumerate(params["down"]):
+        x = _res_block(cfg, lvl["res1"], x, temb)
+        x = _res_block(cfg, lvl["res2"], x, temb)
+        if lvl["attn"] is not None:
+            x = _attn_block(cfg, lvl["attn"], x, text, ctx, f"down{li}")
+        x = constrain(x, "act")
+        skips.append(x)
+        if lvl["down"] is not None:
+            x = _conv(x, lvl["down"], stride=2)
+    x = _res_block(cfg, params["mid"]["res1"], x, temb)
+    x = _attn_block(cfg, params["mid"]["attn"], x, text, ctx, "mid")
+    x = _res_block(cfg, params["mid"]["res2"], x, temb)
+    for li, lvl in enumerate(params["up"]):
+        x = jnp.concatenate([x, skips[-(li + 1)]], axis=-1)
+        x = _res_block(cfg, lvl["res1"], x, temb)
+        x = _res_block(cfg, lvl["res2"], x, temb)
+        if lvl["attn"] is not None:
+            x = _attn_block(cfg, lvl["attn"], x, text, ctx, f"up{li}")
+        x = constrain(x, "act")
+        if lvl["up"] is not None:
+            b, hh, ww, c = x.shape
+            x = jax.image.resize(x, (b, hh * 2, ww * 2, c), "nearest")
+            x = _conv(x, lvl["up"])
+    x = jax.nn.silu(group_norm(x, params["gn_out_s"], params["gn_out_b"]
+                               ).astype(jnp.float32)).astype(cfg.dtype)
+    return _conv(x, params["conv_out"]).astype(jnp.float32)

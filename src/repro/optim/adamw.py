@@ -1,0 +1,160 @@
+"""Optimizers in pure JAX: AdamW (f32 moments) and Adafactor (factored
+second moment -- the memory-frugal choice for the 1T-param kimi-k2 cell).
+
+State layout mirrors the param pytree so pjit shards optimizer state with
+the same PartitionSpecs as the weights (FSDP-style "zero-3" by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Optional[Params]       # adamw first moment
+    nu: Optional[Params]       # adamw second moment
+    vr: Optional[Params]       # adafactor row stats
+    vc: Optional[Params]       # adafactor col stats
+
+
+def lr_at(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32) + 1.0   # first step gets lr > 0
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _factored_dims(shape) -> Optional[Tuple[int, int]]:
+    if len(shape) < 2:
+        return None
+    # factor the two largest dims (standard Adafactor rule)
+    idx = sorted(range(len(shape)), key=lambda i: shape[i])[-2:]
+    return min(idx), max(idx)
+
+
+def init(cfg: OptimConfig, params: Params) -> OptState:
+    if cfg.kind == "adamw":
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(jnp.int32(0), jax.tree.map(zeros, params),
+                        jax.tree.map(zeros, params), None, None)
+    if cfg.kind == "adafactor":
+        def row(p):
+            f = _factored_dims(p.shape)
+            if f is None:
+                return jnp.zeros(p.shape, jnp.float32)
+            shape = list(p.shape); del shape[f[1]]
+            return jnp.zeros(tuple(shape), jnp.float32)
+
+        def col(p):
+            f = _factored_dims(p.shape)
+            if f is None:
+                return jnp.zeros((1,), jnp.float32)
+            shape = list(p.shape); del shape[f[0]]
+            return jnp.zeros(tuple(shape), jnp.float32)
+
+        return OptState(jnp.int32(0), None, None,
+                        jax.tree.map(row, params), jax.tree.map(col, params))
+    raise ValueError(cfg.kind)
+
+
+def apply(cfg: OptimConfig, state: OptState, params: Params, grads: Params
+          ) -> Tuple[Params, OptState, dict]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_at(cfg, state.step)
+    step = state.step + 1
+
+    if cfg.kind == "adamw":
+        b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_m, new_v, None, None), {
+            "grad_norm": gnorm, "lr": lr}
+
+    # ---------------- adafactor (factored 2nd moment, no 1st moment)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd_af(p, g, vr, vc):
+        f = _factored_dims(p.shape)
+        g2 = g * g + 1e-30
+        if f is None:
+            vr_n = decay * vr + (1 - decay) * g2
+            precond = g * jax.lax.rsqrt(vr_n + 1e-30)
+            vc_n = vc
+        else:
+            r, c = f
+            vr_n = decay * vr + (1 - decay) * jnp.mean(g2, axis=c)
+            vc_n = decay * vc + (1 - decay) * jnp.mean(g2, axis=r)
+            denom = jnp.mean(vr_n, axis=None) + 1e-30
+            rfac = jnp.expand_dims(vr_n / denom, c)
+            cfac = jnp.expand_dims(vc_n, r)
+            precond = g * jax.lax.rsqrt(rfac * cfac + 1e-30)
+        # update clipping (Adafactor rms-1 rule)
+        rms = jnp.sqrt(jnp.mean(precond ** 2) + 1e-30)
+        precond = precond / jnp.maximum(1.0, rms)
+        newp = (p.astype(jnp.float32) - lr * precond
+                - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), vr_n, vc_n
+
+    out = jax.tree.map(upd_af, params, grads, state.vr, state.vc)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_vr = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_vc = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, None, None, new_vr, new_vc), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,161 @@
+"""Energy/latency model for DRIFT runs: Table 1, Figs 11-14 arithmetic.
+
+Domain decomposition per generated sample (one voltage domain for the
+accelerator die -- MACs, SRAM, memory controller/PHY all scale ~V^2; DRAM
+*device* energy and leakage do not):
+
+  E = MACs * e_mac * (V/V0)^2 * (1 + abft)        on-die compute + SRAM
+    + DRAM_dev_bytes * e_dram * (1 + mem_ovh)     fixed (device) energy
+    + P_static * T * (V/V0)                       leakage ~ V
+
+  T = sum over computed steps of  t_nom * (emb + (1-emb) * f0/f)
+      (compute-bound; checkpoint offload + recovery reads overlap, Sec 5.4)
+
+Calibration (``calibrate()``): e_mac / e_dram / P_static / utilization are
+fit once so the *nominal* DiT-XL-512 run reproduces Table 1's baseline
+(6.02 J, 0.56 s) with the compute-dominant split of Fig 11(b)
+(~92% die / 6% DRAM device / 2% leakage). Everything else -- the 36%
+undervolt saving, the 1.7x overclock speedup, the <3% DRIFT memory
+overhead, the DSE sweeps -- is then model OUTPUT, not fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import dvfs as dvfs_lib
+from repro.models.common import ModelConfig
+from repro.perfmodel import flops as flops_lib
+from repro.perfmodel import scalesim
+from repro.perfmodel.hw import PAPER_ACCEL, PaperAccel
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    num_steps: int = 50
+    nominal_steps: int = 2
+    aggressive: dvfs_lib.OperatingPoint = dvfs_lib.UNDERVOLT
+    abft_enabled: bool = True
+    ckpt_interval: int = 10
+    embed_mac_fraction: float = 0.02     # embeds' share of per-step MACs
+    taylorseer_interval: int = 0         # 0 = disabled
+    recovery_tiles_per_step: float = 0.0  # from simulation stats
+    repacked_layout: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    hw: PaperAccel = PAPER_ACCEL
+    e_mac_pj: float = 0.12          # on-die energy per MAC (incl. SRAM)
+    e_dram_pj_per_byte: float = 4.0  # DRAM device energy
+    static_w: float = 0.2
+    utilization: float = 0.25       # achieved/peak MACs (SCALE-Sim level)
+
+
+def model_eval_macs(cfg: ModelConfig, batch: int = 1) -> float:
+    return flops_lib.gemm_macs_per_model_eval(cfg, batch)
+
+
+def dram_bytes_per_eval(cfg: ModelConfig, batch: int = 1) -> float:
+    """Weights (int8) streamed once + activation spill traffic."""
+    from repro.models import dit as dit_lib
+    if cfg.family == "dit":
+        n = dit_lib.param_count(cfg)
+    else:
+        n = model_eval_macs(cfg, 1) / max(cfg.latent_size ** 2, 1)
+    return float(n) + 2.0 * activation_bytes(cfg, batch) * 0.25
+
+
+def activation_bytes(cfg: ModelConfig, batch: int = 1) -> float:
+    """Checkpointable GEMM-output volume per step (f32)."""
+    if cfg.family == "dit":
+        t = (cfg.latent_size // cfg.patch_size) ** 2
+        d = cfg.d_model
+        per_block = t * (4 * d + 2 * cfg.d_ff + d)
+        return 4.0 * batch * cfg.n_layers * per_block
+    if cfg.family == "unet":
+        s, c = cfg.latent_size, cfg.unet_channels
+        return 4.0 * batch * sum((s // 2 ** i) ** 2 * ch * 8
+                                 for i, ch in enumerate(c))
+    raise ValueError(cfg.family)
+
+
+def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
+             em: EnergyModel = EnergyModel()) -> Dict[str, float]:
+    """Energy (J) and latency (s) for one generated sample batch."""
+    hw = em.hw
+    macs_step = model_eval_macs(cfg, batch)
+    act_bytes = activation_bytes(cfg, batch)
+    dram_step = dram_bytes_per_eval(cfg, batch)
+
+    steps = list(range(rc.num_steps))
+    if rc.taylorseer_interval > 1:
+        computed = [s for s in steps if s % rc.taylorseer_interval == 0
+                    or s < rc.nominal_steps]
+    else:
+        computed = steps
+    n_nom = sum(1 for s in computed if s < rc.nominal_steps)
+    n_agg = len(computed) - n_nom
+
+    emb = rc.embed_mac_fraction
+    abft = scalesim.abft_overhead_ratio(0, 0, 0, hw) if rc.abft_enabled else 0.0
+    v0 = dvfs_lib.V_NOMINAL
+    vf2 = (rc.aggressive.voltage / v0) ** 2
+    e_mac = em.e_mac_pj * 1e-12
+
+    # on-die energy (V^2-scaled for the aggressive fraction)
+    e_die_nom = macs_step * e_mac * (1 + abft)
+    e_die_agg = macs_step * e_mac * (1 + abft) * (emb + (1 - emb) * vf2)
+    e_die = n_nom * e_die_nom + n_agg * e_die_agg
+
+    # DRAM device energy + DRIFT overheads (ckpt writes 1/n + recovery reads)
+    ckpt_bytes = (len(computed) / max(rc.ckpt_interval, 1)) * act_bytes
+    tiles = rc.recovery_tiles_per_step * len(computed)
+    rows = tiles * (1.0 if rc.repacked_layout else hw.array_dim)
+    recov_bytes = tiles * hw.array_dim ** 2 * 4 + rows * 64  # + row overhead
+    e_dram = (len(computed) * dram_step + ckpt_bytes + recov_bytes) \
+        * em.e_dram_pj_per_byte * 1e-12
+
+    # latency: compute-bound, DVFS frequency scaling
+    t_nom = macs_step / (hw.peak_macs_per_s * em.utilization)
+    f_ratio = hw.freq_ghz / rc.aggressive.freq_ghz
+    t_agg = t_nom * (emb + (1 - emb) * f_ratio)
+    latency = n_nom * t_nom + n_agg * t_agg
+    e_static = em.static_w * latency * (rc.aggressive.voltage / v0)
+
+    return {
+        "energy_j": e_die + e_dram + e_static,
+        "latency_s": latency,
+        "e_die": e_die,
+        "e_dram": e_dram,
+        "e_static": e_static,
+        "e_drift_mem": (ckpt_bytes + recov_bytes) * em.e_dram_pj_per_byte
+            * 1e-12,
+        "abft_overhead": abft,
+        "n_computed_steps": float(len(computed)),
+    }
+
+
+def baseline_rc(num_steps: int = 50) -> RunConfig:
+    return RunConfig(num_steps=num_steps, nominal_steps=0,
+                     aggressive=dvfs_lib.NOMINAL, abft_enabled=False,
+                     ckpt_interval=10 ** 9, recovery_tiles_per_step=0.0)
+
+
+def calibrate(target_e: float = 6.02, target_t: float = 0.56,
+              die_frac: float = 0.92, dram_frac: float = 0.06,
+              num_steps: int = 50) -> EnergyModel:
+    """Fit the four constants to the Table 1 DiT-XL-512 nominal baseline."""
+    from repro import configs
+    cfg = configs.get_config("dit-xl-512")
+    hw = PAPER_ACCEL
+    macs = model_eval_macs(cfg, 1) * num_steps
+    dram = dram_bytes_per_eval(cfg, 1) * num_steps
+    util = macs / (hw.peak_macs_per_s * target_t)
+    return EnergyModel(
+        hw=hw,
+        e_mac_pj=target_e * die_frac / macs * 1e12,
+        e_dram_pj_per_byte=target_e * dram_frac / dram * 1e12,
+        static_w=target_e * (1.0 - die_frac - dram_frac) / target_t,
+        utilization=util,
+    )

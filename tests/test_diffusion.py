@@ -1,0 +1,99 @@
+"""Sampler + schedule + TaylorSeer behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dvfs
+from repro.core.exec_ctx import DriftSystemConfig
+from repro.diffusion import sampler as sampler_lib
+from repro.diffusion import schedule as sched_lib
+from repro.diffusion import taylorseer as ts_lib
+from repro.train import steps as steps_lib
+
+
+@pytest.fixture(scope="module")
+def dit_setup():
+    cfg = configs.get_config("dit-xl-512", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = steps_lib.init_model_params(cfg, key)
+    params["blocks"]["adaln_w"] = 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), params["blocks"]["adaln_w"].shape)
+    params["final_w"] = 0.2 * jax.random.normal(
+        jax.random.fold_in(key, 2), params["final_w"].shape)
+    lat0 = jax.random.normal(jax.random.fold_in(key, 3), (2, 8, 8, 4))
+    cond = jnp.array([1, 2])
+    return cfg, params, lat0, cond
+
+
+def _run(dit_setup, mode, schedule=None, ts=False, n=6):
+    cfg, params, lat0, cond = dit_setup
+    scfg = sampler_lib.SamplerConfig(
+        num_sample_steps=n, drift=DriftSystemConfig(mode=mode),
+        schedule=schedule,
+        taylorseer=ts_lib.TaylorSeerConfig(interval=3, order=2, enabled=ts))
+    return sampler_lib.sample(cfg, params, jax.random.PRNGKey(9), lat0,
+                              cond, None, scfg)
+
+
+def test_schedule_q_sample_consistency():
+    s = sched_lib.DdpmSchedule.default(1000)
+    x0 = jnp.ones((2, 4, 4, 1))
+    eps = jnp.zeros_like(x0)
+    xt = s.q_sample(x0, jnp.array([0, 999]), eps)
+    # early t keeps most signal; final t keeps almost none
+    assert float(xt[0].mean()) > 0.9 * float(x0.mean())
+    assert float(xt[1].mean()) < 0.1 * float(x0.mean())
+
+
+def test_ddim_step_identity_when_perfect():
+    """If eps_pred equals the true noise, DDIM recovers x0 at t_prev=-1."""
+    s = sched_lib.DdpmSchedule.default(100)
+    key = jax.random.PRNGKey(0)
+    x0 = jnp.clip(jax.random.normal(key, (2, 4, 4, 1)), -1, 1)
+    eps = jax.random.normal(jax.random.fold_in(key, 1), x0.shape)
+    t = jnp.int32(50)
+    xt = s.q_sample(x0, jnp.array([50, 50]), eps)
+    x0_hat = s.ddim_step(xt, eps, t, jnp.int32(-1))
+    np.testing.assert_allclose(np.asarray(x0_hat), np.asarray(x0),
+                               atol=1e-4)
+
+
+def test_sampler_deterministic(dit_setup):
+    a = _run(dit_setup, "clean")
+    b = _run(dit_setup, "clean")
+    np.testing.assert_array_equal(np.asarray(a.latents),
+                                  np.asarray(b.latents))
+
+
+def test_drift_beats_faulty(dit_setup):
+    sched = dvfs.fine_grained_schedule(6, dvfs.UNDERVOLT, nominal_steps=2)
+    clean = _run(dit_setup, "clean")
+    faulty = _run(dit_setup, "faulty", sched)
+    drift = _run(dit_setup, "drift", sched)
+    e_f = float(jnp.abs(faulty.latents - clean.latents).mean())
+    e_d = float(jnp.abs(drift.latents - clean.latents).mean())
+    assert e_d < e_f
+    assert int(drift.total_corrected) > 0
+
+
+def test_taylorseer_skips_evals(dit_setup):
+    out = _run(dit_setup, "clean", ts=True)
+    assert int(out.n_model_evals) == 2          # steps 0, 3 of 6
+    full = _run(dit_setup, "clean", ts=False)
+    assert int(full.n_model_evals) == 6
+
+
+def test_taylorseer_forecast_linear():
+    st = ts_lib.init_state((4,))
+    st = ts_lib.update_on_compute(st, jnp.array([0.0, 0.0, 0.0, 0.0]))
+    st = ts_lib.update_on_compute(st, jnp.array([3.0, 3.0, 3.0, 3.0]))
+    pred = ts_lib.forecast(st, jnp.int32(3), interval=3, order=1)
+    np.testing.assert_allclose(np.asarray(pred), 6.0, atol=1e-6)
+
+
+def test_monitor_sees_errors(dit_setup):
+    sched = dvfs.uniform_schedule(6, dvfs.UNDERVOLT)
+    out = _run(dit_setup, "drift", sched)
+    assert float(out.monitor.ema_ber) > 0.0

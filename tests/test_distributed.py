@@ -1,0 +1,126 @@
+"""Sharding rules, checkpoint manager, elastic planning, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed import elastic
+from repro.distributed import sharding as shd
+from repro.optim import compression
+
+
+class FakeMesh:
+    """Shape-only stand-in (tests run on 1 device; rules are pure)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH2 = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_rules_basic():
+    assert shd.spec_for_param("embed", (262144, 5376), MESH2) == \
+        P("model", "data")
+    assert shd.spec_for_param("layers/attn/wq", (4096, 4096), MESH2) == \
+        P("data", "model")
+    assert shd.spec_for_param("layers/moe/w_gate", (384, 7168, 2048),
+                              MESH3) == P("model", ("pod", "data"), None)
+    assert shd.spec_for_param("layers/ln1/scale", (4096,), MESH2) == P(None)
+
+
+def test_param_rules_divisibility_fallback():
+    # mamba2 vocab 50280 is not divisible by 16 -> vocab axis dropped
+    assert shd.spec_for_param("embed", (50280, 1024), MESH2) == \
+        P(None, "data")
+    # hymba in_proj second dim 6482 not divisible -> replicated on that dim
+    assert shd.spec_for_param("layers/ssm/in_proj", (1600, 6482), MESH2) == \
+        P("data", None)
+
+
+def test_cache_spec_gqa_fallback():
+    cfg = configs.get_config("glm4-9b")   # kv=2 < model axis 16
+    spec = shd.cache_spec(cfg, (40, 128, 32768, 2, 128), MESH2)
+    assert spec[3] is None and spec[2] == "model"   # seq-sharded instead
+    cfg2 = configs.get_config("gemma3-27b")  # kv=16 divides
+    spec2 = shd.cache_spec(cfg2, (62, 128, 32768, 16, 168), MESH2)
+    assert spec2[3] == "model"
+
+
+def test_batch_spec_batch1_fallback():
+    spec = shd.batch_spec((1, 524288), MESH2, seq_dim=1)
+    assert spec[0] is None and spec[1] == "data"
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    mgr.save(10, tree, extra={"data_step": 10})
+    mgr.save(20, tree)
+    got = mgr.restore_latest(tree)
+    assert got is not None
+    step, restored, extra = got
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=3)
+    tree = {"a": jnp.arange(4.0)}
+    mgr.save(1, tree)
+    mgr.save(2, {"a": jnp.arange(4.0) * 2})
+    # corrupt the newest checkpoint
+    leaf = os.path.join(str(tmp_path), "step_00000002", "leaf_00000.npy")
+    np.save(leaf, np.zeros(4))
+    step, restored, _ = mgr.restore_latest(tree)
+    assert step == 1
+
+
+def test_checkpoint_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, {"a": jnp.zeros(2)})
+    assert mgr.steps() == [3, 4]
+
+
+def test_elastic_mesh_planning():
+    assert elastic.plan_mesh(512, 16) == ((2, 16, 16),
+                                          ("pod", "data", "model"))
+    assert elastic.plan_mesh(256, 16) == ((16, 16), ("data", "model"))
+    # losing a host: 480 devices, keep TP=16
+    shape, axes = elastic.plan_mesh(480, 16)
+    assert np.prod(shape) == 480
+    with pytest.raises(ValueError):
+        elastic.plan_mesh(100, 16)
+
+
+def test_straggler_detector():
+    det = elastic.StragglerDetector(threshold=1.5)
+    for _ in range(5):
+        bad = det.update({0: 1.0, 1: 1.0, 2: 1.0, 3: 5.0})
+    assert bad == [3]
+    shards = {0: 0, 1: 1, 2: 2, 3: 3}
+    new = det.reassign_shards(shards, bad)
+    assert new[3] != 3 and sorted(new.values()) == [0, 1, 2, 3]
+
+
+def test_compression_error_feedback():
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (64, 64))}
+    err = compression.init_error_buffer(g)
+    total = jnp.zeros((64, 64))
+    # accumulated dequantized gradients converge to true sum (EF property)
+    for i in range(20):
+        q, s, err = compression.compress(g, err)
+        total = total + compression.decompress(q, s)["w"]
+    rel = float(jnp.linalg.norm(total - 20 * g["w"])
+                / jnp.linalg.norm(20 * g["w"]))
+    assert rel < 0.01

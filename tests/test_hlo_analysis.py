@@ -1,0 +1,71 @@
+"""Scan-aware HLO analyzer: verified against hand-countable programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+DOT = 2 * 128 ** 3  # flops of one 128^3 matmul
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+A = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+W8 = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+
+
+def test_single_dot():
+    r = H.analyze(_hlo(lambda x, y: x @ y, A, A))
+    assert r["flops"] == DOT
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(x, w):
+        y, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y.sum()
+    r = H.analyze(_hlo(f, A, W8))
+    assert r["flops"] == 8 * DOT
+
+
+def test_grad_scan_counts_both_loops():
+    def f(x, w):
+        y, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y.sum()
+    r = H.analyze(_hlo(jax.value_and_grad(f, argnums=(0, 1)), A, W8))
+    assert r["flops"] == 24 * DOT     # 8 fwd + 16 bwd (dc, dw per layer)
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(ci, _):
+                return ci @ wi, None
+            ci, _ = jax.lax.scan(inner, c, jnp.arange(4))
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y.sum()
+    r = H.analyze(_hlo(f, A, W8))
+    assert r["flops"] == 32 * DOT     # 8 outer x 4 inner
+
+
+def test_bytes_counts_dot_traffic():
+    r = H.analyze(_hlo(lambda x, y: x @ y, A, A))
+    assert r["bytes"] >= 3 * 128 * 128 * 4   # two operands + result
+
+
+def test_collectives_counted_with_trip_multiplier():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device (dry-run covers this path)")
+
+
+def test_conv_flops():
+    x = jax.ShapeDtypeStruct((1, 16, 16, 8), jnp.float32)
+    k = jax.ShapeDtypeStruct((3, 3, 8, 16), jnp.float32)
+    r = H.analyze(_hlo(
+        lambda a, b: jax.lax.conv_general_dilated(
+            a, b, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")), x, k))
+    assert r["flops"] == 2 * 16 * 16 * 16 * (3 * 3 * 8)

@@ -1,0 +1,56 @@
+"""Flash-attention Pallas kernel vs the pure-jnp attention oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, mha_flash
+from repro.models import attention as attn_ref
+
+
+def _ref(q, k, v, causal):
+    # (BH, S, D) oracle via models.attention.full_attention
+    bh, s, d = q.shape
+    q4 = q.reshape(bh, s, 1, d).transpose(0, 1, 2, 3)
+    k4 = k.reshape(bh, s, 1, d)
+    v4 = v.reshape(bh, s, 1, d)
+    o = attn_ref.full_attention(q4, k4, v4, causal=causal, window=None)
+    return o.reshape(bh, s, d)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("s,d,bq,bk", [(64, 32, 32, 32), (128, 64, 32, 64),
+                                       (96, 16, 32, 32)])
+def test_flash_matches_ref(causal, s, d, bq, bk):
+    key = jax.random.PRNGKey(s + d)
+    q = jax.random.normal(key, (2, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                          interpret=True)
+    want = _ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 64, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 32),
+                          jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 32),
+                          jnp.bfloat16)
+    got = flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    want = _ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=3e-2, rtol=3e-2)
+
+
+def test_mha_wrapper_shape():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 64, 4, 32))
+    o = mha_flash(x, x, x, causal=False, bq=32, bk=32, interpret=True)
+    assert o.shape == (2, 64, 4, 32)
+    ref = attn_ref.full_attention(x, x, x, causal=False, window=None)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref), atol=2e-5)
