@@ -1,32 +1,61 @@
-"""Serve a small diffusion model with batched requests under DRIFT.
+"""Serve a stream of diffusion requests with mixed DVFS operating points
+through one DRIFT serving engine.
 
-Thin driver over repro.launch.serve: processes a queue of generation
-requests, batching them per sampler invocation, with the undervolt
-operating point + rollback-ABFT, and reports per-batch quality/energy.
+Each request picks its own operating point (``--op`` is a comma-separated
+list cycled across requests; ``auto`` defers to the engine's BER-monitor
+ladder). The engine buckets same-configuration requests into fixed-size
+micro-batches, jits each configuration exactly once, reuses the cached
+clean reference for quality metrics, and carries the BER monitor across
+batches.
 
-    PYTHONPATH=src python examples/drift_serve.py --requests 6 --batch 2
+    PYTHONPATH=src python examples/drift_serve.py --requests 6 --batch 2 \
+        --op undervolt,overclock
 """
 import argparse
-import sys
 
-from repro.launch import serve as serve_lib
+from repro.serving import DriftServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--op", default="undervolt")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--op", default="undervolt,overclock",
+                    help="comma-separated operating points, cycled per "
+                         "request (nominal/undervolt/overclock/auto)")
     args = ap.parse_args()
-    n_batches = -(-args.requests // args.batch)
-    print(f"[drift_serve] {args.requests} requests -> {n_batches} batches "
-          f"of {args.batch}")
-    for i in range(n_batches):
-        print(f"--- batch {i} ---")
-        sys.argv = ["serve", "--arch", "dit-xl-512", "--smoke",
-                    "--batch", str(args.batch), "--steps", "10",
-                    "--mode", "drift", "--op", args.op, "--seed", str(i)]
-        serve_lib.main()
+
+    ops = [o.strip() for o in args.op.split(",") if o.strip()]
+    engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
+                              bucket=args.batch)
+    for i in range(args.requests):
+        engine.submit(steps=args.steps, mode="drift", op=ops[i % len(ops)],
+                      seed=i)
+    print(f"[drift_serve] {args.requests} requests, bucket={args.batch}, "
+          f"ops={ops}")
+    results = engine.run()
+
+    for r in results:
+        print(f"req {r.request_id}: op={r.op} batch={r.batch_index} "
+              f"lpips={r.lpips_vs_clean:.4f} psnr={r.psnr_vs_clean_db:.1f}dB "
+              f"corrected(batch)={r.batch_corrected_elems} "
+              f"energy={r.energy_j:.2f}J (baseline {r.baseline_energy_j:.2f}J) "
+              f"monitor_ber={r.monitor_ber:.2e}")
+
+    distinct = len({(r.op, r.mode, r.steps) for r in results})
+    expected_traces = distinct + 1          # + the shared clean reference
+    print(f"engine: {engine.stats.batches} batches, {engine.cache.traces} "
+          f"traces for {distinct} drift configs (+1 clean), "
+          f"{engine.cache.hits} cache hits")
+    # The whole point of the engine: after the first batch of a
+    # configuration, every later batch must hit the compiled-sampler cache
+    # instead of re-jitting.
+    assert engine.cache.traces <= expected_traces, \
+        (engine.cache.traces, expected_traces)
+    if engine.stats.batches > engine.cache.compiles - 1:
+        assert engine.cache.hits > 0, "expected sampler-cache hits"
+    print("sampler cache verified: no recompiles after first batch per config")
 
 
 if __name__ == "__main__":

@@ -50,6 +50,23 @@ NOMINAL = OperatingPoint(0.90, 2.0, "nominal")
 UNDERVOLT = OperatingPoint(0.68, 2.0, "undervolt")   # energy mode
 OVERCLOCK = OperatingPoint(0.88, 3.5, "overclock")   # speed mode
 
+# The ladder the runtime BER monitor walks (Sec 5.1 feedback loop): index 0
+# is the most aggressive undervolt point; when the monitored BER runs hot the
+# index steps toward nominal, when it runs cold it steps back. Length matches
+# ber_monitor_update's default ``n_ladder``.
+OP_LADDER: Tuple[OperatingPoint, ...] = (
+    UNDERVOLT,
+    OperatingPoint(0.73, 2.0, "uv-mild"),
+    OperatingPoint(0.78, 2.0, "uv-safe"),
+    OperatingPoint(0.84, 2.0, "near-nominal"),
+    NOMINAL,
+)
+
+
+def ladder_op(index) -> OperatingPoint:
+    """Operating point for a (possibly traced, hence int()-able) ladder index."""
+    return OP_LADDER[max(0, min(int(index), len(OP_LADDER) - 1))]
+
 
 def _delay_ns(v: float) -> float:
     """Critical-path delay, alpha-power law, calibrated at the nominal point."""

@@ -20,7 +20,7 @@ checkpoint store derived by eval_shape).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -122,8 +122,15 @@ def init_stores(model_cfg: ModelConfig, params, latents, t, cond, text,
 
 def sample(model_cfg: ModelConfig, params, key: jax.Array,
            latents0: jax.Array, cond, text,
-           cfg: SamplerConfig) -> SampleOutput:
-    """Run the full denoising chain from Gaussian latents."""
+           cfg: SamplerConfig,
+           monitor0: Optional[dvfs_lib.BerMonitorState] = None
+           ) -> SampleOutput:
+    """Run the full denoising chain from Gaussian latents.
+
+    ``monitor0`` seeds the runtime BER monitor; passing the previous batch's
+    ``SampleOutput.monitor`` carries the Sec 5.1 feedback loop across batches
+    (the serving engine does), while ``None`` starts from a fresh estimate.
+    """
     sched = sched_lib.DdpmSchedule.default(cfg.num_train_steps)
     ts = sched_lib.ddim_timesteps(cfg.num_train_steps, cfg.num_sample_steps)
     t_prev = np.concatenate([ts[1:], [-1]]).astype(np.int32)
@@ -138,7 +145,7 @@ def sample(model_cfg: ModelConfig, params, key: jax.Array,
     stores0 = init_stores(model_cfg, params, latents0, t0, cond, text,
                           cfg.drift)
     taylor0 = ts_lib.init_state(latents0.shape)
-    mon0 = dvfs_lib.ber_monitor_init()
+    mon0 = monitor0 if monitor0 is not None else dvfs_lib.ber_monitor_init()
 
     def step_fn(carry, inp):
         latents, stores, taylor, mon, corrected, nevals = carry
@@ -183,3 +190,24 @@ def sample(model_cfg: ModelConfig, params, key: jax.Array,
         (jnp.arange(len(ts), dtype=jnp.int32),
          jnp.asarray(ts), jnp.asarray(t_prev)))
     return SampleOutput(latents, mon, corrected, nevals)
+
+
+def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
+                 on_trace: Optional[Callable[[], None]] = None):
+    """Build a reusable jitted sampling entry point for one configuration.
+
+    Returns ``run(params, key, latents0, cond, text, monitor0)`` ->
+    ``SampleOutput``. The model/sampler configs are closed over, so repeated
+    calls with same-shaped arrays never retrace: this is the unit the serving
+    engine caches per (arch, steps, mode, operating point, batch bucket).
+
+    ``on_trace`` fires once per (re)trace -- a Python side effect that only
+    runs while JAX is staging the function, so the serving tests use it as an
+    exact compile counter.
+    """
+    def _run(params, key, latents0, cond, text, monitor0):
+        if on_trace is not None:
+            on_trace()
+        return sample(model_cfg, params, key, latents0, cond, text, cfg,
+                      monitor0=monitor0)
+    return jax.jit(_run)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(a_ref, b_ref, flip_ref,
             c_ref, act_row_ref, exp_row_ref, act_col_ref, exp_col_ref,
@@ -120,7 +122,7 @@ def abft_matmul(aq: jax.Array, bq: jax.Array, flips: jax.Array,
         out_specs=out_specs,
         out_shape=out_shapes,
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(aq, bq, flips)

@@ -136,6 +136,30 @@ def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
     }
 
 
+# Energy components that scale with (and are attributed to) request count;
+# latency is shared -- everything in a batch finishes together.
+_PER_REQUEST_KEYS = ("energy_j", "e_die", "e_dram", "e_static", "e_drift_mem")
+
+
+def per_request_cost(cfg: ModelConfig, rc: RunConfig, batch: int,
+                     n_live: int, em: EnergyModel = EnergyModel()
+                     ) -> Dict[str, float]:
+    """Attribute one batch-bucket run's cost evenly across its live requests.
+
+    ``batch`` is the compiled bucket size, ``n_live`` the requests actually
+    served by it. Padding slots burn real compute, so their energy lands on
+    the live requests (the serving engine's bucketing overhead is visible in
+    the per-request numbers instead of silently vanishing). Latency keys are
+    returned unscaled.
+    """
+    cost = run_cost(cfg, rc, batch=batch, em=em)
+    share = 1.0 / max(n_live, 1)
+    out = dict(cost)
+    for k in _PER_REQUEST_KEYS:
+        out[k] = cost[k] * share
+    return out
+
+
 def baseline_rc(num_steps: int = 50) -> RunConfig:
     return RunConfig(num_steps=num_steps, nominal_steps=0,
                      aggressive=dvfs_lib.NOMINAL, abft_enabled=False,

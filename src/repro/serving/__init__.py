@@ -1,0 +1,29 @@
+"""Batched DRIFT serving: request queue, micro-batcher, compiled-sampler
+cache, and the single-process engine tying them together.
+
+Public API (see ``engine.DriftServeEngine`` for the full contract)::
+
+    from repro.serving import DriftServeEngine
+
+    engine = DriftServeEngine(arch="dit-xl-512", smoke=True, bucket=2)
+    engine.submit(steps=10, mode="drift", op="undervolt", seed=0)
+    engine.submit(steps=10, mode="drift", op="auto", seed=1)
+    results = engine.run()          # List[RequestResult], submission order
+
+Each distinct (arch, steps, mode, operating point, bucket) configuration
+compiles exactly once per process (``engine.cache.traces`` counts actual
+JAX traces); the BER monitor persists across batches and feeds requests
+that pick their DVFS operating point with ``op="auto"``.
+"""
+from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
+from repro.serving.cache import CompiledSamplerCache, SamplerKey
+from repro.serving.engine import OP_BY_NAME, DriftServeEngine, EngineStats
+from repro.serving.request import (REQUEST_OPS, GenerationRequest,
+                                   RequestQueue, RequestResult)
+
+__all__ = [
+    "DriftServeEngine", "EngineStats", "OP_BY_NAME",
+    "GenerationRequest", "RequestQueue", "RequestResult", "REQUEST_OPS",
+    "MicroBatch", "MicroBatcher", "request_key",
+    "CompiledSamplerCache", "SamplerKey",
+]

@@ -1,0 +1,69 @@
+"""Micro-batcher: groups FIFO requests into fixed-size same-config buckets.
+
+Requests only share a sampler invocation when they resolve to the same
+``SamplerKey`` (same arch/steps/mode/op/...), so batches are formed by
+taking the head request's key and sweeping the queue for up to ``bucket``
+matches; later non-matching requests keep their queue position. A short
+final group is padded up to the bucket size (duplicating the last live
+request's latents downstream) so every compiled sampler sees exactly one
+batch shape -- the whole point of fixed-size buckets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+from repro.serving.cache import SamplerKey
+from repro.serving.request import GenerationRequest, RequestQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroBatch:
+    """One bucket of same-config requests ready to run."""
+    key: SamplerKey
+    requests: List[GenerationRequest]   # live requests, FIFO order
+
+    @property
+    def n_pad(self) -> int:
+        return self.key.bucket - len(self.requests)
+
+
+def request_key(req: GenerationRequest, bucket: int,
+                resolved_op: str) -> SamplerKey:
+    """SamplerKey for a request whose operating point is already resolved.
+
+    Clean mode runs with no DVFS schedule at all, so its op normalizes to
+    "": clean requests with different nominal op names share one compiled
+    sampler (the same key the engine's clean-reference path uses), and the
+    energy accounting falls back to the nominal point actually run.
+    """
+    return SamplerKey(arch=req.arch, smoke=req.smoke, steps=req.steps,
+                      mode=req.mode,
+                      op="" if req.mode == "clean" else resolved_op,
+                      bucket=bucket,
+                      taylorseer=req.taylorseer,
+                      rollback_interval=req.rollback_interval)
+
+
+class MicroBatcher:
+    """Forms one bucket at a time so "auto" operating points can consult the
+    engine's live BER-monitor state between batches."""
+
+    def __init__(self, bucket: int) -> None:
+        assert bucket >= 1, bucket
+        self.bucket = bucket
+
+    def next_batch(self, queue: RequestQueue,
+                   resolve_op: Callable[[GenerationRequest], str]
+                   ) -> MicroBatch:
+        """Pop the next bucket. ``resolve_op`` maps a request to a concrete
+        operating-point name (handling "auto" via the monitor ladder); it is
+        applied per-request while scanning, so two "auto" requests land in
+        the same bucket only if they resolve identically."""
+        head = queue.peek()
+        assert head is not None, "next_batch on an empty queue"
+        key = request_key(head, self.bucket, resolve_op(head))
+        reqs = queue.take_matching(
+            key, lambda r: request_key(r, self.bucket, resolve_op(r)),
+            self.bucket)
+        return MicroBatch(key=key, requests=reqs)

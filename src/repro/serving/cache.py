@@ -1,0 +1,56 @@
+"""Compiled-sampler cache: one jitted sampler per serving configuration.
+
+The cache key is everything that changes the traced computation -- arch,
+step count, DRIFT mode, operating point (its name pins the DVFS schedule
+baked into the trace), batch bucket, TaylorSeer, rollback interval. Each
+key jits exactly once per process; the ``traces`` counter (driven by
+``sampler.make_sampler``'s ``on_trace`` hook, which only fires while JAX
+stages the function) is the ground truth the serving tests assert on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerKey:
+    """Hashable identity of one compiled sampler configuration."""
+    arch: str
+    smoke: bool
+    steps: int
+    mode: str
+    op: str            # operating-point name; "" when no DVFS schedule
+    bucket: int        # compiled batch size
+    taylorseer: bool = False
+    rollback_interval: int = 10
+
+
+class CompiledSamplerCache:
+    """Maps SamplerKey -> jitted sampler fn, with compile accounting."""
+
+    def __init__(self) -> None:
+        self._fns: Dict[SamplerKey, Callable] = {}
+        self.compiles = 0   # cache misses (factory invocations)
+        self.hits = 0       # cache hits (reused compiled fn)
+        self.traces = 0     # actual JAX traces observed via on_trace
+
+    def note_trace(self) -> None:
+        self.traces += 1
+
+    def get(self, key: SamplerKey,
+            factory: Callable[[SamplerKey], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is not None:
+            self.hits += 1
+            return fn
+        fn = factory(key)
+        self._fns[key] = fn
+        self.compiles += 1
+        return fn
+
+    def __contains__(self, key: SamplerKey) -> bool:
+        return key in self._fns
+
+    def __len__(self) -> int:
+        return len(self._fns)

@@ -1,0 +1,302 @@
+"""The DRIFT batched serving engine.
+
+Replaces the per-batch re-launch hack (old ``launch/serve.py`` +
+``examples/drift_serve.py``, which re-parsed argv and re-jitted the full
+sampler for every batch) with one process-resident engine:
+
+  * a FIFO ``RequestQueue`` + ``MicroBatcher`` grouping pending requests
+    into fixed-size same-configuration batch buckets (short tails padded),
+  * a ``CompiledSamplerCache`` keyed by (arch, steps, mode, operating
+    point, bucket, ...) so each configuration jits exactly once per
+    process,
+  * per-request DVFS operating-point selection: requests name a point or
+    say ``"auto"``, which reads the engine's shared BER-monitor ladder
+    index -- the Sec 5.1 feedback loop, with monitor state carried across
+    batches via ``sampler.sample(monitor0=...)``,
+  * a clean-reference cache: the error-free sample for a given
+    (configuration, latent seeds) batch is computed once through the same
+    compiled-sampler cache and reused for quality metrics,
+  * per-request quality + energy accounting returned as structured
+    ``RequestResult`` records (perfmodel bucket cost split across live
+    requests).
+
+Typical use::
+
+    engine = DriftServeEngine(bucket=2)
+    for i, op in enumerate(["undervolt", "overclock", "auto"]):
+        engine.submit(steps=10, mode="drift", op=op, seed=i)
+    for res in engine.run():
+        print(res.request_id, res.op, res.psnr_vs_clean_db, res.energy_j)
+
+The engine is single-threaded by design: batches run sequentially so the
+BER-monitor feedback is well-ordered. Async offload and sharded multi-host
+serving layer on top of this (see ROADMAP open items).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import zlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import dvfs as dvfs_lib
+from repro.core import metrics
+from repro.core.exec_ctx import DriftSystemConfig
+from repro.core.rollback import RollbackConfig
+from repro.diffusion import sampler as sampler_lib
+from repro.diffusion.taylorseer import TaylorSeerConfig
+from repro.perfmodel import energy
+from repro.serving.batcher import MicroBatch, MicroBatcher
+from repro.serving.cache import CompiledSamplerCache, SamplerKey
+from repro.serving.request import (GenerationRequest, RequestQueue,
+                                   RequestResult)
+from repro.train import steps as steps_lib
+
+# Named operating points a request (or the auto ladder) can resolve to.
+OP_BY_NAME: Dict[str, dvfs_lib.OperatingPoint] = {
+    p.name: p
+    for p in (dvfs_lib.NOMINAL, dvfs_lib.UNDERVOLT, dvfs_lib.OVERCLOCK)
+    + dvfs_lib.OP_LADDER
+}
+
+# Modes whose ABFT detections feed the BER monitor; other modes produce no
+# detection signal, so folding their zero counts would drag the EMA down.
+_MONITORED_MODES = ("drift", "thundervolt", "approx_abft", "dmr", "stat_abft")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    batches: int = 0
+    padded_slots: int = 0
+    clean_samples_computed: int = 0
+    clean_sample_hits: int = 0
+
+
+class DriftServeEngine:
+    """Continuous-batching serving engine for DRIFT diffusion sampling."""
+
+    def __init__(self, arch: str = "dit-xl-512", smoke: bool = True,
+                 bucket: int = 2, base_seed: int = 0,
+                 nominal_steps: int = 2,
+                 monitor_target_ber: float = 3e-3,
+                 clean_cache_size: int = 8,
+                 sampler_factory: Optional[Callable] = None,
+                 energy_model: Optional[energy.EnergyModel] = None):
+        self.default_arch = arch
+        self.default_smoke = smoke
+        self.nominal_steps = nominal_steps
+        self.monitor_target_ber = monitor_target_ber
+        self.queue = RequestQueue()
+        self.batcher = MicroBatcher(bucket)
+        self.cache = CompiledSamplerCache()
+        self.stats = EngineStats()
+        self.monitor = dvfs_lib.ber_monitor_init()
+        self._base_key = jax.random.PRNGKey(base_seed)
+        self._batch_counter = 0
+        self._params: Dict[Tuple[str, bool], object] = {}
+        # LRU: exact seed batches rarely repeat in open-ended serving, so
+        # the clean-sample store is bounded (the compiled clean *sampler*
+        # stays cached in self.cache regardless).
+        self._clean_samples: "collections.OrderedDict[Tuple[SamplerKey, Tuple[int, ...]], jax.Array]" = \
+            collections.OrderedDict()
+        self._clean_cache_size = clean_cache_size
+        self._sampler_factory = sampler_factory or (
+            lambda key, model_cfg, scfg, on_trace:
+            sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace))
+        self._energy_model = energy_model
+        self._full_cfgs: Dict[str, object] = {}
+
+    # ------------------------------------------------------------- intake
+    def submit(self, **fields) -> int:
+        """Queue one generation request; returns its request id."""
+        fields.setdefault("arch", self.default_arch)
+        fields.setdefault("smoke", self.default_smoke)
+        family = configs.get_config(fields["arch"]).family
+        if family not in ("dit", "unet"):
+            raise ValueError(
+                f"arch {fields['arch']!r} is a {family} model; the serving "
+                "engine drives the diffusion archs (use launch/train.py "
+                "for LMs)")
+        return self.queue.submit(**fields)
+
+    # ------------------------------------------------------------ serving
+    def run(self) -> List[RequestResult]:
+        """Drain the queue, one micro-batch at a time; results come back in
+        submission order regardless of how batching regrouped them."""
+        results: Dict[int, RequestResult] = {}
+        while len(self.queue):
+            mb = self.batcher.next_batch(self.queue, self._resolve_op)
+            for res in self._run_batch(mb):
+                results[res.request_id] = res
+        return [results[rid] for rid in sorted(results)]
+
+    def _resolve_op(self, req: GenerationRequest) -> str:
+        if req.op == "auto":
+            return dvfs_lib.ladder_op(self.monitor.op_index).name
+        return req.op
+
+    # ------------------------------------------------------------ helpers
+    def _params_for(self, arch: str, smoke: bool):
+        k = (arch, smoke)
+        if k not in self._params:
+            cfg = configs.get_config(arch, smoke=smoke)
+            # crc32, not hash(): Python randomizes str hashes per process,
+            # and param init must be reproducible across runs.
+            tag = zlib.crc32(f"{arch}:{smoke}".encode()) & 0x7FFFFFFF
+            self._params[k] = steps_lib.init_model_params(
+                cfg, jax.random.fold_in(self._base_key, tag))
+        return self._params[k]
+
+    def _batch_inputs(self, model_cfg, seeds: List[int]):
+        """Per-request initial latents + conditioning, stacked to the bucket."""
+        shape = (model_cfg.latent_size, model_cfg.latent_size,
+                 model_cfg.latent_channels)
+        lat = jnp.stack([
+            jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(s), 7),
+                              shape) for s in seeds])
+        if model_cfg.cond_tokens:
+            text = jnp.stack([
+                0.1 * jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(s), 8),
+                    (model_cfg.cond_tokens, model_cfg.cond_dim))
+                for s in seeds])
+            return lat, None, text
+        cond = jnp.asarray([s % max(model_cfg.num_classes, 1) for s in seeds],
+                           dtype=jnp.int32)
+        return lat, cond, None
+
+    def _build_sampler(self, key: SamplerKey) -> Callable:
+        model_cfg = configs.get_config(key.arch, smoke=key.smoke)
+        if key.mode == "clean" or not key.op:
+            schedule = None
+        else:
+            schedule = dvfs_lib.fine_grained_schedule(
+                key.steps, OP_BY_NAME[key.op],
+                nominal_steps=self.nominal_steps)
+        scfg = sampler_lib.SamplerConfig(
+            num_sample_steps=key.steps,
+            drift=DriftSystemConfig(
+                mode=key.mode,
+                rollback=RollbackConfig(interval=key.rollback_interval)),
+            schedule=schedule,
+            taylorseer=TaylorSeerConfig(enabled=key.taylorseer),
+            monitor_target_ber=self.monitor_target_ber)
+        return self._sampler_factory(key, model_cfg, scfg,
+                                     self.cache.note_trace)
+
+    def _clean_reference(self, key: SamplerKey, seeds: Tuple[int, ...],
+                         params, latents, cond, text) -> jax.Array:
+        """Error-free reference latents for this batch, cached by
+        (configuration, latent seeds): the compiled clean sampler jits once
+        per configuration and each unique input batch samples once."""
+        ckey = dataclasses.replace(key, mode="clean", op="")
+        sample_id = (ckey, seeds)
+        cached = self._clean_samples.get(sample_id)
+        if cached is not None:
+            self._clean_samples.move_to_end(sample_id)
+            self.stats.clean_sample_hits += 1
+            return cached
+        fn = self.cache.get(ckey, self._build_sampler)
+        out = fn(params, jax.random.PRNGKey(0), latents, cond, text,
+                 dvfs_lib.ber_monitor_init())
+        clean = jnp.clip(out.latents, -1, 1)
+        self._clean_samples[sample_id] = clean
+        while len(self._clean_samples) > self._clean_cache_size:
+            self._clean_samples.popitem(last=False)
+        self.stats.clean_samples_computed += 1
+        return clean
+
+    def _energy_model_for(self):
+        if self._energy_model is None:
+            self._energy_model = energy.calibrate()
+        return self._energy_model
+
+    def _full_cfg(self, arch: str):
+        if arch not in self._full_cfgs:
+            self._full_cfgs[arch] = configs.get_config(arch)
+        return self._full_cfgs[arch]
+
+    # ---------------------------------------------------------- one batch
+    def _run_batch(self, mb: MicroBatch) -> List[RequestResult]:
+        key = mb.key
+        batch_index = self._batch_counter
+        self._batch_counter += 1
+        self.stats.batches += 1
+        self.stats.padded_slots += mb.n_pad
+
+        model_cfg = configs.get_config(key.arch, smoke=key.smoke)
+        params = self._params_for(key.arch, key.smoke)
+        live_seeds = [r.seed for r in mb.requests]
+        padded_seeds = tuple(live_seeds + [live_seeds[-1]] * mb.n_pad)
+        latents, cond, text = self._batch_inputs(model_cfg,
+                                                 list(padded_seeds))
+
+        fn = self.cache.get(key, self._build_sampler)
+        run_key = jax.random.fold_in(self._base_key, batch_index)
+        out = fn(params, run_key, latents, cond, text, self.monitor)
+        if key.mode in _MONITORED_MODES:
+            self.monitor = out.monitor   # Sec 5.1 carry-over across batches
+
+        img = jnp.clip(out.latents, -1, 1)
+        if key.mode == "clean":
+            clean = img       # the run IS the reference; don't jit a twin
+        else:
+            clean = self._clean_reference(key, padded_seeds, params,
+                                          latents, cond, text)
+        # report the engine's post-batch state: for unmonitored modes the
+        # sampler's internal EMA decays toward zero on no-detection steps,
+        # which would misrepresent the actual error estimate
+        mon_ber = float(self.monitor.ema_ber)
+        mon_idx = int(self.monitor.op_index)
+        corrected = int(out.total_corrected)
+        nevals = int(out.n_model_evals)
+
+        # perfmodel attribution: full-arch energy model, bucket cost split
+        # across the live requests (padding overhead lands on them).
+        em = self._energy_model_for()
+        full = self._full_cfg(key.arch)
+        op_point = OP_BY_NAME.get(key.op, dvfs_lib.NOMINAL)
+        # only protected modes pay ABFT compute + checkpoint DRAM traffic;
+        # clean/faulty/float_clean run neither mechanism
+        protected = key.mode in _MONITORED_MODES
+        rc = energy.RunConfig(
+            num_steps=key.steps, nominal_steps=self.nominal_steps,
+            aggressive=op_point,
+            ckpt_interval=key.rollback_interval if protected else 10 ** 9,
+            abft_enabled=protected,
+            taylorseer_interval=3 if key.taylorseer else 0,
+            recovery_tiles_per_step=corrected / max(key.steps, 1)
+            / (32 * 32))
+        n_live = len(mb.requests)
+        cost = energy.per_request_cost(full, rc, batch=key.bucket,
+                                       n_live=n_live, em=em)
+        base = energy.per_request_cost(full, energy.baseline_rc(key.steps),
+                                       batch=key.bucket, n_live=n_live,
+                                       em=em)
+
+        results = []
+        for slot, req in enumerate(mb.requests):
+            a, b = img[slot:slot + 1], clean[slot:slot + 1]
+            results.append(RequestResult(
+                request_id=req.request_id,
+                batch_index=batch_index,
+                bucket_size=key.bucket,
+                op=key.op or "nominal",
+                mode=key.mode,
+                steps=key.steps,
+                lpips_vs_clean=float(metrics.lpips_proxy(a, b)),
+                psnr_vs_clean_db=float(metrics.psnr(a, b)),
+                batch_corrected_elems=corrected,
+                n_model_evals=nevals,
+                energy_j=cost["energy_j"],
+                latency_s=cost["latency_s"],
+                baseline_energy_j=base["energy_j"],
+                baseline_latency_s=base["latency_s"],
+                monitor_ber=mon_ber,
+                monitor_op_index=mon_idx,
+            ))
+        return results

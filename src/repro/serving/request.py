@@ -1,0 +1,109 @@
+"""Serving request/result types and the FIFO request queue.
+
+A ``GenerationRequest`` is one user-facing generation job: which diffusion
+arch to run, how many DDIM steps, which DRIFT protection mode, and which
+DVFS operating point -- ``"auto"`` delegates the choice to the engine's
+shared BER-monitor ladder (Sec 5.1). Results come back as structured
+``RequestResult`` records (quality vs the clean reference, energy/latency
+attribution, monitor state) instead of prints.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional
+
+from repro.core.exec_ctx import MODES
+
+# Operating points a request may name; "auto" resolves against the engine's
+# BER-monitor ladder at batch-formation time.
+REQUEST_OPS = ("nominal", "undervolt", "overclock", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationRequest:
+    """One queued generation job. Frozen: the queue hands out copies only."""
+    request_id: int
+    arch: str = "dit-xl-512"
+    smoke: bool = True
+    steps: int = 10
+    mode: str = "drift"            # exec_ctx.MODES member
+    op: str = "undervolt"          # REQUEST_OPS member
+    seed: int = 0                  # drives this request's initial latents
+    taylorseer: bool = False
+    rollback_interval: int = 10
+
+    def __post_init__(self):
+        if self.op not in REQUEST_OPS:
+            raise ValueError(
+                f"unknown operating point {self.op!r}; one of {REQUEST_OPS}")
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown DRIFT mode {self.mode!r}; one of {MODES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Structured per-request outcome of one engine run."""
+    request_id: int
+    batch_index: int               # which micro-batch served this request
+    bucket_size: int
+    op: str                        # resolved operating-point name
+    mode: str
+    steps: int
+    # quality vs the cached clean reference (same latents, BER 0)
+    lpips_vs_clean: float
+    psnr_vs_clean_db: float
+    # rollback-corrected elements summed over the WHOLE batch tensor
+    # (including padded slots) -- the sampler reports one scalar per scan,
+    # so this cannot be split per request; don't sum it across results.
+    batch_corrected_elems: int
+    # computed denoising steps for this request's sample (identical for
+    # every request in the batch; < steps when TaylorSeer forecasts)
+    n_model_evals: int
+    # perfmodel attribution (full-arch energy model, bucket cost split
+    # across live requests; latency is the shared batch latency)
+    energy_j: float
+    latency_s: float
+    baseline_energy_j: float
+    baseline_latency_s: float
+    # BER-monitor state after this request's batch
+    monitor_ber: float
+    monitor_op_index: int
+
+
+class RequestQueue:
+    """FIFO queue assigning monotonically increasing request ids."""
+
+    def __init__(self) -> None:
+        self._pending: Deque[GenerationRequest] = collections.deque()
+        self._next_id = 0
+
+    def submit(self, **fields) -> int:
+        req = GenerationRequest(request_id=self._next_id, **fields)
+        self._next_id += 1
+        self._pending.append(req)
+        return req.request_id
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def peek(self) -> Optional[GenerationRequest]:
+        return self._pending[0] if self._pending else None
+
+    def take_matching(self, head_key, key_of, limit: int
+                      ) -> List[GenerationRequest]:
+        """Pop up to ``limit`` pending requests whose ``key_of(req)`` equals
+        ``head_key``, scanning in FIFO order (later non-matching requests
+        keep their place)."""
+        taken: List[GenerationRequest] = []
+        kept: Deque[GenerationRequest] = collections.deque()
+        while self._pending and len(taken) < limit:
+            req = self._pending.popleft()
+            if key_of(req) == head_key:
+                taken.append(req)
+            else:
+                kept.append(req)
+        kept.extend(self._pending)
+        self._pending = kept
+        return taken

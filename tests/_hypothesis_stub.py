@@ -1,0 +1,77 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The tier-1 suite uses a small slice of the hypothesis API (`given`,
+`settings`, `st.integers`, `st.sampled_from`). When the real package is
+available the test modules import it directly; otherwise they fall back to
+this stub, which replays each property over a deterministic set of examples
+(range corners plus seeded pseudo-random interior points, capped at the
+test's `max_examples`). Install `hypothesis` (see requirements-dev.txt) for
+real shrinking/fuzzing coverage.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, values):
+        self.values = list(values)
+
+
+def _integers(min_value, max_value):
+    rng = random.Random(0x5EED ^ (min_value * 31) ^ max_value)
+    span = max_value - min_value
+    picks = [min_value, max_value, min_value + span // 2]
+    picks += [min_value + rng.randrange(span + 1) for _ in range(4)]
+    seen, vals = set(), []
+    for v in picks:
+        if v not in seen:
+            seen.add(v)
+            vals.append(v)
+    return _Strategy(vals)
+
+
+def _sampled_from(elements):
+    return _Strategy(elements)
+
+
+st = types.SimpleNamespace(integers=_integers, sampled_from=_sampled_from)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+    def apply(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(**strategies):
+    names = list(strategies)
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            combos = list(itertools.product(
+                *(strategies[n].values for n in names)))
+            cap = getattr(wrapper, "_stub_max_examples",
+                          _DEFAULT_MAX_EXAMPLES)
+            if len(combos) > cap:
+                rng = random.Random(0xD21F7)
+                interior = rng.sample(combos[1:-1], max(cap - 2, 0))
+                combos = [combos[0]] + interior + [combos[-1]]
+            for combo in combos:
+                fn(*args, **dict(zip(names, combo)), **kwargs)
+
+        # Hide the strategy-filled params from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values() if p.name not in strategies])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

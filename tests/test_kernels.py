@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                         # deterministic local fallback
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import fault, quant
 from repro.kernels import abft_matmul as ak
