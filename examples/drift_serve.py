@@ -3,17 +3,29 @@ through one DRIFT serving engine.
 
 Each request picks its own operating point (``--op`` is a comma-separated
 list cycled across requests; ``auto`` defers to the engine's BER-monitor
-ladder). The engine buckets same-configuration requests into fixed-size
-micro-batches, jits each configuration exactly once, reuses the cached
-clean reference for quality metrics, and carries the BER monitor across
-batches.
+ladder, ``core.dvfs.OP_LADDER``). The engine buckets same-configuration
+requests into fixed-size micro-batches, jits each configuration exactly
+once, reuses the cached clean reference for quality metrics, and carries
+the BER monitor across batches. Per-request energy/latency comes from
+``perfmodel.energy.per_request_cost`` (the bucket's cost split across its
+live requests).
 
     PYTHONPATH=src python examples/drift_serve.py --requests 6 --batch 2 \
         --op undervolt,overclock
+
+``--sharded`` runs the same stream through ``ShardedDriftServeEngine``,
+spreading every micro-batch over the local (data, model) device mesh --
+on one device it degrades to the plain engine, and on a data-parallel
+mesh the latents are bit-identical either way:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/drift_serve.py --requests 8 \
+        --batch 8 --sharded
 """
 import argparse
 
 from repro.serving import DriftServeEngine
+from repro.serving.sharded import ShardedDriftServeEngine, make_engine
 
 
 def main():
@@ -24,16 +36,28 @@ def main():
     ap.add_argument("--op", default="undervolt,overclock",
                     help="comma-separated operating points, cycled per "
                          "request (nominal/undervolt/overclock/auto)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="spread micro-batches across the device mesh")
+    ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
 
     ops = [o.strip() for o in args.op.split(",") if o.strip()]
-    engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
-                              bucket=args.batch)
+    if args.sharded:
+        engine = make_engine(arch="dit-xl-512", smoke=True,
+                             bucket=args.batch,
+                             model_parallel=args.model_parallel)
+    else:
+        if args.model_parallel != 1:
+            raise SystemExit("--model-parallel requires --sharded")
+        engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
+                                  bucket=args.batch)
     for i in range(args.requests):
         engine.submit(steps=args.steps, mode="drift", op=ops[i % len(ops)],
                       seed=i)
+    mesh = (dict(engine.mesh.shape)
+            if isinstance(engine, ShardedDriftServeEngine) else "1 device")
     print(f"[drift_serve] {args.requests} requests, bucket={args.batch}, "
-          f"ops={ops}")
+          f"ops={ops}, mesh={mesh}")
     results = engine.run()
 
     for r in results:

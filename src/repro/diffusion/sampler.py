@@ -16,6 +16,9 @@ state, TaylorSeer table). Per step:
 
 Works for DiT/PixArt (scanned or unrolled blocks) and the SD1.5 UNet (flat
 checkpoint store derived by eval_shape).
+
+The carry layout, checkpoint-offload semantics, and the shard-aware
+``make_sampler(mesh=...)`` contract are documented in ``docs/sampler.md``.
 """
 from __future__ import annotations
 
@@ -193,7 +196,8 @@ def sample(model_cfg: ModelConfig, params, key: jax.Array,
 
 
 def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
-                 on_trace: Optional[Callable[[], None]] = None):
+                 on_trace: Optional[Callable[[], None]] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
     """Build a reusable jitted sampling entry point for one configuration.
 
     Returns ``run(params, key, latents0, cond, text, monitor0)`` ->
@@ -204,10 +208,39 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
     ``on_trace`` fires once per (re)trace -- a Python side effect that only
     runs while JAX is staging the function, so the serving tests use it as an
     exact compile counter.
+
+    ``mesh`` makes the sampler shard-aware (the ``ShardedDriftServeEngine``
+    path): the latents batch is pinned to the mesh's data axes with
+    ``repro.distributed.sharding.batch_spec`` on entry and exit, and the
+    scalar outputs (BER-monitor state, corrected-element / model-eval
+    counts) are pinned to replicated -- the detected-error sums feeding the
+    monitor are reduced over the batch-sharded dimension, so GSPMD lowers
+    them to a cross-device psum and every device carries the same ladder
+    state. ``mesh=None`` is the single-device path, byte-for-byte the old
+    behavior.
     """
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.distributed import sharding as shd
+
+        replicated = NamedSharding(mesh, PartitionSpec())
+
+        def _pin_batch(x):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, shd.batch_spec(x.shape, mesh)))
+
     def _run(params, key, latents0, cond, text, monitor0):
         if on_trace is not None:
             on_trace()
-        return sample(model_cfg, params, key, latents0, cond, text, cfg,
-                      monitor0=monitor0)
+        if mesh is None:
+            return sample(model_cfg, params, key, latents0, cond, text, cfg,
+                          monitor0=monitor0)
+        out = sample(model_cfg, params, key, _pin_batch(latents0), cond,
+                     text, cfg, monitor0=monitor0)
+        pin_rep = lambda x: jax.lax.with_sharding_constraint(x, replicated)
+        return SampleOutput(
+            latents=_pin_batch(out.latents),
+            monitor=jax.tree.map(pin_rep, out.monitor),
+            total_corrected=pin_rep(out.total_corrected),
+            n_model_evals=pin_rep(out.n_model_evals))
     return jax.jit(_run)

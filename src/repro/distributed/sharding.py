@@ -14,7 +14,11 @@ Conventions (MaxText-style FSDP + TP/EP):
     the sequence dim (GQA kv=2 cases like glm4 would pad 8x otherwise).
 
 Everything is expressed as PartitionSpec trees matched by parameter path,
-consumed by pjit in launch/{dryrun,train,serve}.py.
+consumed by pjit in launch/{dryrun,train}.py and by the sharded serving
+engine (``repro.serving.sharded``), whose diffusion-side mapping is:
+latents batch on ``data`` (``batch_spec``), DiT weights tensor-parallel on
+``model`` per the rules below, BER-monitor state replicated
+(``replicated``). See docs/serving.md for the full mesh/axis table.
 """
 from __future__ import annotations
 
@@ -126,6 +130,22 @@ def param_specs(tree: Any, mesh: Mesh) -> Any:
 def shardings_for(tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s),
                         param_specs(tree, mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated sharding: every device holds the whole array (the
+    serving engine's BER-monitor state and scalar counters)."""
+    return NamedSharding(mesh, P())
+
+
+def spec_str(spec: P) -> str:
+    """Canonical short string for a PartitionSpec, e.g. ``"data,None,None"``
+    -- hashable mesh-placement component of the serving ``SamplerKey``."""
+    def one(entry):
+        if isinstance(entry, tuple):
+            return "+".join(str(a) for a in entry)
+        return str(entry)
+    return ",".join(one(e) for e in spec)
 
 
 # --------------------------------------------------------------- batches

@@ -21,3 +21,25 @@ def make_debug_mesh(model: int = 2):
     n = len(jax.devices())
     data = max(n // model, 1)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(model_parallel: int = 1, devices=None):
+    """(data, model) mesh for the sharded serving engine.
+
+    ``data`` gets every device not claimed by ``model_parallel`` -- the
+    serving engine spreads one micro-batch bucket over it, so bucket sizes
+    should be multiples of the data-axis size (otherwise the batch stays
+    replicated; see ``distributed.sharding.batch_spec``). ``devices``
+    restricts the mesh to a subset (tests carve a 4-device mesh out of 8
+    fake CPU devices); default is all local devices.
+    """
+    import numpy as np
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    if model_parallel < 1 or n % model_parallel:
+        raise ValueError(
+            f"model_parallel={model_parallel} does not divide {n} devices")
+    shape = (n // model_parallel, model_parallel)
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices).reshape(shape), ("data", "model"))

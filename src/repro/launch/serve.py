@@ -1,4 +1,4 @@
-"""DRIFT serving launcher: thin CLI over ``repro.serving.DriftServeEngine``.
+"""DRIFT serving launcher: thin CLI over ``repro.serving``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch dit-xl-512 --smoke \
         --batch 2 --steps 10 --mode drift --op undervolt
@@ -6,11 +6,22 @@
 Submits ``--requests`` generation requests (default: one bucket's worth)
 to a single engine instance and prints the structured per-request results:
 quality vs the engine's cached clean reference, and the perfmodel's
-energy/latency attribution for the chosen operating point. The engine jits
-each (arch, steps, mode, op, bucket) configuration once and computes the
-clean reference once per (configuration, latent seeds) batch -- repeated
-invocations of ``main()`` in one process reuse both caches when given the
-same engine.
+energy/latency attribution (``perfmodel.energy.per_request_cost``: the
+bucket's cost split across live requests, so padding overhead is visible).
+The engine jits each (arch, steps, mode, op, bucket, mesh) configuration
+once and computes the clean reference once per (configuration, latent
+seeds) batch -- repeated invocations of ``main()`` in one process reuse
+both caches when given the same engine.
+
+``--op auto`` defers each request's DVFS operating point to the engine's
+BER-monitor ladder (``core.dvfs.OP_LADDER``: undervolt -> uv-mild ->
+uv-safe -> near-nominal -> nominal), the Sec 5.1 feedback loop carried
+across batches.
+
+``--sharded`` spreads each micro-batch across every local device on a
+(data, model) mesh (``--model-parallel`` sets the model-axis width) via
+``ShardedDriftServeEngine``; with one device it degrades to the plain
+engine. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -20,11 +31,17 @@ from typing import Optional, Sequence
 
 from repro.serving import DriftServeEngine
 from repro.serving.request import REQUEST_OPS
+from repro.serving.sharded import ShardedDriftServeEngine, make_engine
 
 
 def build_engine(args) -> DriftServeEngine:
-    return DriftServeEngine(arch=args.arch, smoke=args.smoke,
-                            bucket=args.batch, base_seed=args.seed)
+    common = dict(arch=args.arch, smoke=args.smoke, bucket=args.batch,
+                  base_seed=args.seed)
+    if args.sharded:
+        return make_engine(model_parallel=args.model_parallel, **common)
+    if args.model_parallel != 1:
+        raise SystemExit("--model-parallel requires --sharded")
+    return DriftServeEngine(**common)
 
 
 def main(argv: Optional[Sequence[str]] = None,
@@ -40,13 +57,23 @@ def main(argv: Optional[Sequence[str]] = None,
     ap.add_argument("--mode", default="drift",
                     choices=["clean", "faulty", "drift", "thundervolt",
                              "approx_abft", "dmr", "stat_abft"])
-    ap.add_argument("--op", default="undervolt", choices=list(REQUEST_OPS))
-    ap.add_argument("--interval", type=int, default=10)
+    ap.add_argument("--op", default="undervolt", choices=list(REQUEST_OPS),
+                    help="DVFS operating point; 'auto' walks "
+                         "core.dvfs.OP_LADDER via the BER monitor")
+    ap.add_argument("--interval", type=int, default=10,
+                    help="rollback checkpoint-refresh interval (steps)")
     ap.add_argument("--taylorseer", action="store_true")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard each micro-batch across the local device "
+                         "mesh (single device: plain engine)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="mesh model-axis width for --sharded")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     eng = engine if engine is not None else build_engine(args)
+    if isinstance(eng, ShardedDriftServeEngine):
+        print(f"[serve] mesh {dict(eng.mesh.shape)}")
     bucket = eng.batcher.bucket        # an injected engine's bucket wins
     n_requests = args.requests or bucket
     for i in range(n_requests):

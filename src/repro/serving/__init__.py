@@ -10,7 +10,12 @@ Public API (see ``engine.DriftServeEngine`` for the full contract)::
     engine.submit(steps=10, mode="drift", op="auto", seed=1)
     results = engine.run()          # List[RequestResult], submission order
 
-Each distinct (arch, steps, mode, operating point, bucket) configuration
+``ShardedDriftServeEngine`` (or the ``make_engine`` factory, which degrades
+to the single-device engine when there is one device) runs the same loop
+with each micro-batch sharded across a device mesh -- see
+``repro.serving.sharded`` and docs/serving.md.
+
+Each distinct (arch, steps, mode, operating point, bucket, mesh) configuration
 compiles exactly once per process (``engine.cache.traces`` counts actual
 JAX traces); the BER monitor persists across batches and feeds requests
 that pick their DVFS operating point with ``op="auto"``.
@@ -20,9 +25,11 @@ from repro.serving.cache import CompiledSamplerCache, SamplerKey
 from repro.serving.engine import OP_BY_NAME, DriftServeEngine, EngineStats
 from repro.serving.request import (REQUEST_OPS, GenerationRequest,
                                    RequestQueue, RequestResult)
+from repro.serving.sharded import ShardedDriftServeEngine, make_engine
 
 __all__ = [
-    "DriftServeEngine", "EngineStats", "OP_BY_NAME",
+    "DriftServeEngine", "ShardedDriftServeEngine", "make_engine",
+    "EngineStats", "OP_BY_NAME",
     "GenerationRequest", "RequestQueue", "RequestResult", "REQUEST_OPS",
     "MicroBatch", "MicroBatcher", "request_key",
     "CompiledSamplerCache", "SamplerKey",

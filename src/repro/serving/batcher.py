@@ -11,7 +11,7 @@ batch shape -- the whole point of fixed-size buckets.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 from repro.serving.cache import SamplerKey
 from repro.serving.request import GenerationRequest, RequestQueue
@@ -28,30 +28,37 @@ class MicroBatch:
         return self.key.bucket - len(self.requests)
 
 
-def request_key(req: GenerationRequest, bucket: int,
-                resolved_op: str) -> SamplerKey:
+def request_key(req: GenerationRequest, bucket: int, resolved_op: str,
+                extra: Optional[Dict[str, object]] = None) -> SamplerKey:
     """SamplerKey for a request whose operating point is already resolved.
 
     Clean mode runs with no DVFS schedule at all, so its op normalizes to
     "": clean requests with different nominal op names share one compiled
     sampler (the same key the engine's clean-reference path uses), and the
     energy accounting falls back to the nominal point actually run.
+
+    ``extra`` overrides engine-level key fields a request cannot express --
+    the sharded engine stamps its (mesh_shape, batch_spec) placement here
+    so two engines on different meshes never alias a compiled fn.
     """
-    return SamplerKey(arch=req.arch, smoke=req.smoke, steps=req.steps,
-                      mode=req.mode,
-                      op="" if req.mode == "clean" else resolved_op,
-                      bucket=bucket,
-                      taylorseer=req.taylorseer,
-                      rollback_interval=req.rollback_interval)
+    key = SamplerKey(arch=req.arch, smoke=req.smoke, steps=req.steps,
+                     mode=req.mode,
+                     op="" if req.mode == "clean" else resolved_op,
+                     bucket=bucket,
+                     taylorseer=req.taylorseer,
+                     rollback_interval=req.rollback_interval)
+    return dataclasses.replace(key, **extra) if extra else key
 
 
 class MicroBatcher:
     """Forms one bucket at a time so "auto" operating points can consult the
     engine's live BER-monitor state between batches."""
 
-    def __init__(self, bucket: int) -> None:
+    def __init__(self, bucket: int,
+                 key_extra: Optional[Dict[str, object]] = None) -> None:
         assert bucket >= 1, bucket
         self.bucket = bucket
+        self.key_extra = dict(key_extra or {})
 
     def next_batch(self, queue: RequestQueue,
                    resolve_op: Callable[[GenerationRequest], str]
@@ -62,8 +69,8 @@ class MicroBatcher:
         the same bucket only if they resolve identically."""
         head = queue.peek()
         assert head is not None, "next_batch on an empty queue"
-        key = request_key(head, self.bucket, resolve_op(head))
-        reqs = queue.take_matching(
-            key, lambda r: request_key(r, self.bucket, resolve_op(r)),
-            self.bucket)
+        key_of = lambda r: request_key(r, self.bucket, resolve_op(r),
+                                       self.key_extra)
+        key = key_of(head)
+        reqs = queue.take_matching(key, key_of, self.bucket)
         return MicroBatch(key=key, requests=reqs)

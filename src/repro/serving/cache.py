@@ -2,15 +2,16 @@
 
 The cache key is everything that changes the traced computation -- arch,
 step count, DRIFT mode, operating point (its name pins the DVFS schedule
-baked into the trace), batch bucket, TaylorSeer, rollback interval. Each
-key jits exactly once per process; the ``traces`` counter (driven by
+baked into the trace), batch bucket, TaylorSeer, rollback interval, and
+(for the sharded engine) the device-mesh placement. Each key jits exactly
+once per process; the ``traces`` counter (driven by
 ``sampler.make_sampler``'s ``on_trace`` hook, which only fires while JAX
 stages the function) is the ground truth the serving tests assert on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +25,13 @@ class SamplerKey:
     bucket: int        # compiled batch size
     taylorseer: bool = False
     rollback_interval: int = 10
+    # Sharded-engine placement (empty on the single-device path): the mesh
+    # axes/sizes the bucket is spread over and the latents batch
+    # PartitionSpec, both rendered hashable. Different meshes bake
+    # different collectives into the executable, so they must not share a
+    # compiled fn even when every model-side field matches.
+    mesh_shape: Tuple[Tuple[str, int], ...] = ()
+    batch_spec: str = ""
 
 
 class CompiledSamplerCache:

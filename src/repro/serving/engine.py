@@ -29,8 +29,12 @@ Typical use::
         print(res.request_id, res.op, res.psnr_vs_clean_db, res.energy_j)
 
 The engine is single-threaded by design: batches run sequentially so the
-BER-monitor feedback is well-ordered. Async offload and sharded multi-host
-serving layer on top of this (see ROADMAP open items).
+BER-monitor feedback is well-ordered. ``serving/sharded.py`` extends this
+exact loop across a device mesh (one micro-batch spread over the ``data``
+axis, params sharded per ``repro.distributed.sharding``) without changing
+the ordering guarantee; async offload layers on later (see ROADMAP).
+
+Architecture walk-through: ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -91,7 +95,8 @@ class DriftServeEngine:
         self.nominal_steps = nominal_steps
         self.monitor_target_ber = monitor_target_ber
         self.queue = RequestQueue()
-        self.batcher = MicroBatcher(bucket)
+        self.batcher = MicroBatcher(bucket,
+                                    key_extra=self._sampler_key_extra(bucket))
         self.cache = CompiledSamplerCache()
         self.stats = EngineStats()
         self.monitor = dvfs_lib.ber_monitor_init()
@@ -138,6 +143,11 @@ class DriftServeEngine:
         if req.op == "auto":
             return dvfs_lib.ladder_op(self.monitor.op_index).name
         return req.op
+
+    def _sampler_key_extra(self, bucket: int) -> Dict[str, object]:
+        """SamplerKey fields stamped by the engine rather than the request
+        (the sharded subclass adds its mesh placement here)."""
+        return {}
 
     # ------------------------------------------------------------ helpers
     def _params_for(self, arch: str, smoke: bool):
@@ -298,5 +308,6 @@ class DriftServeEngine:
                 baseline_latency_s=base["latency_s"],
                 monitor_ber=mon_ber,
                 monitor_op_index=mon_idx,
+                latents=a[0],
             ))
         return results

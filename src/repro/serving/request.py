@@ -70,6 +70,10 @@ class RequestResult:
     # BER-monitor state after this request's batch
     monitor_ber: float
     monitor_op_index: int
+    # this request's generated sample: its slot of the batch output latents,
+    # clipped to [-1, 1], shape (H, W, C). Optional so metric-only fakes in
+    # tests stay cheap; the real engine always fills it.
+    latents: Optional[object] = None
 
 
 class RequestQueue:

@@ -8,12 +8,15 @@ runs the real smoke DiT sampler and asserts on the exact JAX trace count.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import dvfs
 from repro.diffusion.sampler import SampleOutput
 from repro.serving import DriftServeEngine, SamplerKey
 from repro.serving.request import GenerationRequest, RequestQueue
+from repro.serving import sharded as sharded_mod
+from repro.serving.sharded import ShardedDriftServeEngine
 
 
 def fake_factory(calls=None):
@@ -160,6 +163,28 @@ def test_clean_mode_requests_do_not_feed_monitor():
     eng.submit(steps=2, mode="clean", op="nominal", seed=0)
     eng.run()
     assert int(eng.monitor.n_updates) == 0
+
+
+# --------------------------------------------- single-device degradation
+def test_make_engine_falls_back_on_one_device(monkeypatch):
+    """With nothing to shard over, the factory must return the plain
+    single-device engine (same class PR 1 shipped), not a mesh wrapper."""
+    monkeypatch.setattr(sharded_mod.jax, "device_count", lambda: 1)
+    eng = sharded_mod.make_engine(bucket=2)
+    assert type(eng) is DriftServeEngine
+    # plain-engine cache keys carry no mesh placement
+    eng.submit(steps=2, mode="drift", op="undervolt", seed=0)
+    mb = eng.batcher.next_batch(eng.queue, eng._resolve_op)
+    assert mb.key.mesh_shape == () and mb.key.batch_spec == ""
+
+
+def test_make_engine_falls_back_on_size_one_mesh():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    eng = sharded_mod.make_engine(mesh=mesh, bucket=2)
+    assert type(eng) is DriftServeEngine
+    assert not isinstance(eng, ShardedDriftServeEngine)
 
 
 # ------------------------------------------------------------ end-to-end
