@@ -1,17 +1,31 @@
-"""Serve a stream of diffusion requests with mixed DVFS operating points
-through one DRIFT serving engine.
+"""Serve a stream of diffusion requests with mixed DVFS operating points,
+priorities, and deadlines through one DRIFT serving engine.
 
 Each request picks its own operating point (``--op`` is a comma-separated
 list cycled across requests; ``auto`` defers to the engine's BER-monitor
-ladder, ``core.dvfs.OP_LADDER``). The engine buckets same-configuration
-requests into fixed-size micro-batches, jits each configuration exactly
-once, reuses the cached clean reference for quality metrics, and carries
-the BER monitor across batches. Per-request energy/latency comes from
+ladder, ``core.dvfs.OP_LADDER``) and scheduling class (``--priority`` is
+cycled the same way). The engine buckets same-configuration requests into
+fixed-size micro-batches, jits each configuration exactly once, reuses the
+cached clean reference for quality metrics, and carries the BER monitor
+across batches. Per-request energy/latency comes from
 ``perfmodel.energy.per_request_cost`` (the bucket's cost split across its
 live requests).
 
     PYTHONPATH=src python examples/drift_serve.py --requests 6 --batch 2 \
         --op undervolt,overclock
+
+``--deadline`` (a cycled list like ``--op``; ``none`` = no deadline, with
+optional ``--step-budget``) routes submissions through the deadline-aware
+scheduler: admission control projects each request's completion on the
+engine's virtual (perfmodel) clock, escalates urgent work to overclock or
+trims its denoising steps, and rejects hopeless requests -- see
+docs/scheduler.md. ``--stream K`` yields latent previews every K
+denoising steps ahead of the final results (final latents bit-identical
+to the unstreamed path):
+
+    PYTHONPATH=src python examples/drift_serve.py --requests 2 --batch 1 \
+        --steps 6 --op undervolt --priority interactive,background \
+        --deadline 0.055,none --stream 2
 
 ``--sharded`` runs the same stream through ``ShardedDriftServeEngine``,
 spreading every micro-batch over the local (data, model) device mesh --
@@ -24,24 +38,55 @@ mesh the latents are bit-identical either way:
 """
 import argparse
 
-from repro.serving import DriftServeEngine
-from repro.serving.sharded import ShardedDriftServeEngine, make_engine
+from repro.core import dvfs as dvfs_lib
+from repro.serving import (DeadlineScheduler, DriftServeEngine, PreviewEvent,
+                           ShardedDriftServeEngine, make_engine)
+from repro.serving.request import REQUEST_PRIORITIES
+
+OP_LADDER_HELP = " -> ".join(p.name for p in dvfs_lib.OP_LADDER)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser():
+    ap = argparse.ArgumentParser(
+        description="Mixed-op / mixed-priority DRIFT serving demo.",
+        epilog=f"The op 'auto' walks core.dvfs.OP_LADDER "
+               f"({OP_LADDER_HELP}) via the engine's BER monitor.")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--op", default="undervolt,overclock",
                     help="comma-separated operating points, cycled per "
-                         "request (nominal/undervolt/overclock/auto)")
+                         "request (nominal/undervolt/overclock/auto; "
+                         f"'auto' walks the ladder {OP_LADDER_HELP})")
+    ap.add_argument("--priority", default="standard",
+                    help="comma-separated scheduling classes "
+                         f"({'/'.join(REQUEST_PRIORITIES)}), cycled per "
+                         "request; non-standard classes enable the "
+                         "deadline-aware scheduler")
+    ap.add_argument("--deadline", default=None, metavar="SEC[,SEC|none...]",
+                    help="comma-separated relative deadlines (engine "
+                         "virtual seconds; 'none' = no deadline), cycled "
+                         "per request; enables admission control with "
+                         "op-escalation / step-trimming")
+    ap.add_argument("--step-budget", type=int, default=None, metavar="N",
+                    help="per-request cap on denoising steps")
+    ap.add_argument("--stream", type=int, default=0, metavar="K",
+                    help="yield latent previews every K denoising steps "
+                         "(0 = off)")
     ap.add_argument("--sharded", action="store_true",
                     help="spread micro-batches across the device mesh")
     ap.add_argument("--model-parallel", type=int, default=1)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     ops = [o.strip() for o in args.op.split(",") if o.strip()]
+    priorities = [p.strip() for p in args.priority.split(",") if p.strip()]
+    deadlines = [None if d.strip().lower() == "none" else float(d)
+                 for d in args.deadline.split(",") if d.strip()] \
+        if args.deadline is not None else [None]
     if args.sharded:
         engine = make_engine(arch="dit-xl-512", smoke=True,
                              bucket=args.batch,
@@ -51,34 +96,76 @@ def main():
             raise SystemExit("--model-parallel requires --sharded")
         engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
                                   bucket=args.batch)
+
+    use_scheduler = (args.deadline is not None
+                     or args.step_budget is not None
+                     or any(p != "standard" for p in priorities))
+    sched = DeadlineScheduler(engine) if use_scheduler else None
+    rejected = 0
     for i in range(args.requests):
-        engine.submit(steps=args.steps, mode="drift", op=ops[i % len(ops)],
+        fields = dict(steps=args.steps, mode="drift", op=ops[i % len(ops)],
                       seed=i)
+        if sched is not None:
+            adm = sched.submit(priority=priorities[i % len(priorities)],
+                               deadline_s=deadlines[i % len(deadlines)],
+                               step_budget=args.step_budget, **fields)
+            rejected += not adm.admitted
+            print(f"[admission] {adm.action}: op={adm.op} steps={adm.steps}"
+                  + (f" ({adm.reason})" if adm.reason else ""))
+        else:
+            engine.submit(**fields)
+
     mesh = (dict(engine.mesh.shape)
             if isinstance(engine, ShardedDriftServeEngine) else "1 device")
     print(f"[drift_serve] {args.requests} requests, bucket={args.batch}, "
           f"ops={ops}, mesh={mesh}")
-    results = engine.run()
+
+    previews = 0
+    if args.stream:
+        results = []
+        for ev in engine.run_stream(args.stream):
+            if isinstance(ev, PreviewEvent):
+                previews += 1
+            else:
+                results.append(ev)
+        results.sort(key=lambda r: r.request_id)
+        print(f"[drift_serve] {previews} preview events streamed")
+    else:
+        results = engine.run()
 
     for r in results:
-        print(f"req {r.request_id}: op={r.op} batch={r.batch_index} "
+        miss = " MISSED-DEADLINE" if r.deadline_missed else ""
+        print(f"req {r.request_id}: op={r.op} steps={r.steps} "
+              f"prio={r.priority} batch={r.batch_index} "
               f"lpips={r.lpips_vs_clean:.4f} psnr={r.psnr_vs_clean_db:.1f}dB "
               f"corrected(batch)={r.batch_corrected_elems} "
               f"energy={r.energy_j:.2f}J (baseline {r.baseline_energy_j:.2f}J) "
-              f"monitor_ber={r.monitor_ber:.2e}")
+              f"monitor_ber={r.monitor_ber:.2e}{miss}")
 
     distinct = len({(r.op, r.mode, r.steps) for r in results})
-    expected_traces = distinct + 1          # + the shared clean reference
+    # one-shot: one trace per distinct config; streamed: a window plus
+    # possibly a remainder window per config -> at most two traces per
+    # distinct config. Clean references are keyed by step count (the
+    # scheduler may trim steps per request), one one-shot trace each.
+    per_config = 2 if args.stream else 1
+    clean_configs = len({r.steps for r in results})
+    expected_traces = distinct * per_config + clean_configs
     print(f"engine: {engine.stats.batches} batches, {engine.cache.traces} "
-          f"traces for {distinct} drift configs (+1 clean), "
-          f"{engine.cache.hits} cache hits")
+          f"traces for {distinct} drift configs (+{clean_configs} clean), "
+          f"{engine.cache.hits} cache hits; clock {engine.clock_s:.3f}s, "
+          f"{engine.stats.deadline_misses} deadline misses")
+    if sched is not None:
+        print(f"scheduler: {sched.stats}")
     # The whole point of the engine: after the first batch of a
     # configuration, every later batch must hit the compiled-sampler cache
-    # instead of re-jitting.
+    # instead of re-jitting. (Skip when admission rejected everything --
+    # zero batches means nothing to assert about.)
     assert engine.cache.traces <= expected_traces, \
         (engine.cache.traces, expected_traces)
-    if engine.stats.batches > engine.cache.compiles - 1:
+    if results and engine.stats.batches > engine.cache.compiles - 1:
         assert engine.cache.hits > 0, "expected sampler-cache hits"
+    if args.stream and any(r.steps > args.stream for r in results):
+        assert previews >= 1, "streaming produced no previews"
     print("sampler cache verified: no recompiles after first batch per config")
 
 

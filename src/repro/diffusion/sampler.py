@@ -17,6 +17,16 @@ state, TaylorSeer table). Per step:
 Works for DiT/PixArt (scanned or unrolled blocks) and the SD1.5 UNet (flat
 checkpoint store derived by eval_shape).
 
+Two execution shapes share one step function:
+
+  * ``sample`` / ``make_sampler()`` -- the whole chain as ONE ``lax.scan``
+    (a single XLA while-loop, no host round-trips),
+  * ``sample_stream`` / ``make_sampler(stream_window=k)`` -- the same scan
+    chunked into windows of ``k`` steps, surfacing the carry's latents
+    between windows as ``StreamEvent`` previews. The per-step math is
+    identical, so the streamed chain's final latents are bit-identical to
+    the one-shot scan (the serving tests assert this).
+
 The carry layout, checkpoint-offload semantics, and the shard-aware
 ``make_sampler(mesh=...)`` contract are documented in ``docs/sampler.md``.
 """
@@ -58,6 +68,15 @@ class SampleOutput(NamedTuple):
     monitor: dvfs_lib.BerMonitorState
     total_corrected: jax.Array
     n_model_evals: jax.Array
+
+
+class StreamEvent(NamedTuple):
+    """Intermediate preview from a streaming sampler: the carry's latents
+    after ``step`` completed denoising steps (1-based, < num_sample_steps --
+    the final state arrives as the terminating ``SampleOutput``, never as a
+    ``StreamEvent``)."""
+    step: int
+    latents: jax.Array
 
 
 def _model_eval(model_cfg: ModelConfig, params, latents, t, cond, text,
@@ -123,36 +142,41 @@ def init_stores(model_cfg: ModelConfig, params, latents, t, cond, text,
     return dit_lib.drift_store_spec(model_cfg, latents.shape[0])
 
 
-def sample(model_cfg: ModelConfig, params, key: jax.Array,
-           latents0: jax.Array, cond, text,
-           cfg: SamplerConfig,
-           monitor0: Optional[dvfs_lib.BerMonitorState] = None
-           ) -> SampleOutput:
-    """Run the full denoising chain from Gaussian latents.
-
-    ``monitor0`` seeds the runtime BER monitor; passing the previous batch's
-    ``SampleOutput.monitor`` carries the Sec 5.1 feedback loop across batches
-    (the serving engine does), while ``None`` starts from a fresh estimate.
-    """
+def _schedule_arrays(cfg: SamplerConfig):
+    """(DDPM schedule, DDIM timesteps, next-timesteps, BER table) -- the
+    trace-free per-run constants shared by one-shot and streamed sampling."""
     sched = sched_lib.DdpmSchedule.default(cfg.num_train_steps)
     ts = sched_lib.ddim_timesteps(cfg.num_train_steps, cfg.num_sample_steps)
     t_prev = np.concatenate([ts[1:], [-1]]).astype(np.int32)
-
     if cfg.schedule is not None:
         ber_table = cfg.schedule.ber_table
     else:
         ber_table = jnp.zeros((cfg.num_sample_steps, dvfs_lib.N_CLASSES))
+    return sched, ts, t_prev, ber_table
 
+
+def _init_carry(model_cfg: ModelConfig, params, latents0, cond, text,
+                cfg: SamplerConfig, monitor0, ts):
     b = latents0.shape[0]
     t0 = jnp.full((b,), float(ts[0]), jnp.float32)
     stores0 = init_stores(model_cfg, params, latents0, t0, cond, text,
                           cfg.drift)
     taylor0 = ts_lib.init_state(latents0.shape)
     mon0 = monitor0 if monitor0 is not None else dvfs_lib.ber_monitor_init()
+    return (latents0, stores0, taylor0, mon0, jnp.int32(0), jnp.int32(0))
+
+
+def _make_step_fn(model_cfg: ModelConfig, cfg: SamplerConfig, sched,
+                  ber_table, params, key, cond, text):
+    """One denoising step of the sampling scan. Everything step-dependent
+    (step index, timesteps) flows through the scan inputs, so the SAME step
+    function drives both the one-shot full-length scan and the chunked
+    streaming windows -- that is what makes the two paths bit-identical."""
 
     def step_fn(carry, inp):
         latents, stores, taylor, mon, corrected, nevals = carry
         i, t_now, t_nxt = inp
+        b = latents.shape[0]
         tvec = jnp.full((b,), t_now, jnp.float32)
         ber_by_class = ber_table[jnp.minimum(i, ber_table.shape[0] - 1)]
         drift_inputs = (cfg.drift, jax.random.fold_in(key, i), i,
@@ -179,7 +203,7 @@ def sample(model_cfg: ModelConfig, params, key: jax.Array,
         else:
             eps, stores2, taylor2, corr, detected, ran = do_compute(None)
 
-        n_words = max(int(np.prod(latents0.shape)), 1)
+        n_words = max(int(np.prod(latents.shape)), 1)
         mon2 = dvfs_lib.ber_monitor_update(
             mon, detected, n_words, cfg.drift.abft.threshold_bit,
             cfg.monitor_target_ber)
@@ -187,17 +211,80 @@ def sample(model_cfg: ModelConfig, params, key: jax.Array,
         return (new_latents, stores2, taylor2, mon2,
                 corrected + corr, nevals + ran), None
 
-    carry0 = (latents0, stores0, taylor0, mon0, jnp.int32(0), jnp.int32(0))
+    return step_fn
+
+
+def _scan_xs(ts, t_prev):
+    return (jnp.arange(len(ts), dtype=jnp.int32),
+            jnp.asarray(ts), jnp.asarray(t_prev))
+
+
+def sample(model_cfg: ModelConfig, params, key: jax.Array,
+           latents0: jax.Array, cond, text,
+           cfg: SamplerConfig,
+           monitor0: Optional[dvfs_lib.BerMonitorState] = None
+           ) -> SampleOutput:
+    """Run the full denoising chain from Gaussian latents.
+
+    ``monitor0`` seeds the runtime BER monitor; passing the previous batch's
+    ``SampleOutput.monitor`` carries the Sec 5.1 feedback loop across batches
+    (the serving engine does), while ``None`` starts from a fresh estimate.
+    """
+    sched, ts, t_prev, ber_table = _schedule_arrays(cfg)
+    carry0 = _init_carry(model_cfg, params, latents0, cond, text, cfg,
+                         monitor0, ts)
+    step_fn = _make_step_fn(model_cfg, cfg, sched, ber_table, params, key,
+                            cond, text)
     (latents, _, _, mon, corrected, nevals), _ = jax.lax.scan(
-        step_fn, carry0,
-        (jnp.arange(len(ts), dtype=jnp.int32),
-         jnp.asarray(ts), jnp.asarray(t_prev)))
+        step_fn, carry0, _scan_xs(ts, t_prev))
     return SampleOutput(latents, mon, corrected, nevals)
+
+
+def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
+                  latents0: jax.Array, cond, text,
+                  cfg: SamplerConfig,
+                  monitor0: Optional[dvfs_lib.BerMonitorState] = None,
+                  window: int = 1,
+                  _window_runner: Optional[Callable] = None):
+    """Generator form of :func:`sample`: the same denoising scan chunked
+    into windows of ``window`` steps, yielding a :class:`StreamEvent`
+    (completed-step count + current latents) after every window except the
+    last, then the final :class:`SampleOutput` as the terminating item.
+
+    The per-step computation is the one-shot scan's step function verbatim
+    (all step-dependent state rides the scan inputs), so the final latents
+    are bit-identical to ``sample``'s. Call with ``_window_runner`` from
+    ``make_sampler(stream_window=...)`` to drive a pre-jitted window (the
+    serving path); without it each window scans un-jitted (fine for tests
+    and small smoke runs).
+    """
+    assert window >= 1, window
+    sched, ts, t_prev, ber_table = _schedule_arrays(cfg)
+    carry = _init_carry(model_cfg, params, latents0, cond, text, cfg,
+                        monitor0, ts)
+    xs = _scan_xs(ts, t_prev)
+    n = len(ts)
+
+    if _window_runner is None:
+        def _window_runner(params, key, cond, text, carry, xs_slice):
+            step_fn = _make_step_fn(model_cfg, cfg, sched, ber_table,
+                                    params, key, cond, text)
+            return jax.lax.scan(step_fn, carry, xs_slice)[0]
+
+    for start in range(0, n, window):
+        xs_slice = tuple(x[start:start + window] for x in xs)
+        carry = _window_runner(params, key, cond, text, carry, xs_slice)
+        done = min(start + window, n)
+        if done < n:
+            yield StreamEvent(step=done, latents=carry[0])
+    latents, _, _, mon, corrected, nevals = carry
+    yield SampleOutput(latents, mon, corrected, nevals)
 
 
 def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
                  on_trace: Optional[Callable[[], None]] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 stream_window: int = 0):
     """Build a reusable jitted sampling entry point for one configuration.
 
     Returns ``run(params, key, latents0, cond, text, monitor0)`` ->
@@ -218,6 +305,16 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
     them to a cross-device psum and every device carries the same ladder
     state. ``mesh=None`` is the single-device path, byte-for-byte the old
     behavior.
+
+    ``stream_window=k`` (k >= 1) returns a STREAMING entry point instead:
+    calling it yields :class:`StreamEvent` previews every ``k`` denoising
+    steps and terminates with the :class:`SampleOutput` (see
+    :func:`sample_stream`). One window of ``k`` steps is jitted once and
+    reused for every full window of every call; a trailing partial window
+    (when ``k`` does not divide the step count) is a second, shorter trace
+    -- so a streamed configuration costs at most two traces where the
+    one-shot sampler costs one. The serving engine keys its compiled-sampler
+    cache on the window size (``SamplerKey.stream``).
     """
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
@@ -228,6 +325,40 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
         def _pin_batch(x):
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, shd.batch_spec(x.shape, mesh)))
+
+        def _pin_carry(carry):
+            """Same placement contract as the one-shot wrapper, applied at
+            window boundaries: latents on the data axes, monitor + scalar
+            counters replicated; stores/taylor follow GSPMD propagation."""
+            latents, stores, taylor, mon, corrected, nevals = carry
+            pin_rep = lambda x: jax.lax.with_sharding_constraint(x,
+                                                                 replicated)
+            return (_pin_batch(latents), stores, taylor,
+                    jax.tree.map(pin_rep, mon), pin_rep(corrected),
+                    pin_rep(nevals))
+
+    if stream_window:
+        assert stream_window >= 1, stream_window
+        sched, _, _, ber_table = _schedule_arrays(cfg)
+
+        def _window(params, key, cond, text, carry, xs_slice):
+            if on_trace is not None:
+                on_trace()
+            if mesh is not None:
+                carry = _pin_carry(carry)
+            step_fn = _make_step_fn(model_cfg, cfg, sched, ber_table,
+                                    params, key, cond, text)
+            carry, _ = jax.lax.scan(step_fn, carry, xs_slice)
+            return _pin_carry(carry) if mesh is not None else carry
+
+        window_jit = jax.jit(_window)
+
+        def _run_stream(params, key, latents0, cond, text, monitor0):
+            return sample_stream(model_cfg, params, key, latents0, cond,
+                                 text, cfg, monitor0=monitor0,
+                                 window=stream_window,
+                                 _window_runner=window_jit)
+        return _run_stream
 
     def _run(params, key, latents0, cond, text, monitor0):
         if on_trace is not None:

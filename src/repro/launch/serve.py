@@ -8,15 +8,25 @@ to a single engine instance and prints the structured per-request results:
 quality vs the engine's cached clean reference, and the perfmodel's
 energy/latency attribution (``perfmodel.energy.per_request_cost``: the
 bucket's cost split across live requests, so padding overhead is visible).
-The engine jits each (arch, steps, mode, op, bucket, mesh) configuration
-once and computes the clean reference once per (configuration, latent
-seeds) batch -- repeated invocations of ``main()`` in one process reuse
-both caches when given the same engine.
+The engine jits each (arch, steps, mode, op, bucket, stream, mesh)
+configuration once and computes the clean reference once per
+(configuration, latent seeds) batch -- repeated invocations of ``main()``
+in one process reuse both caches when given the same engine.
 
 ``--op auto`` defers each request's DVFS operating point to the engine's
-BER-monitor ladder (``core.dvfs.OP_LADDER``: undervolt -> uv-mild ->
-uv-safe -> near-nominal -> nominal), the Sec 5.1 feedback loop carried
-across batches.
+BER-monitor ladder (``core.dvfs.OP_LADDER``), the Sec 5.1 feedback loop
+carried across batches.
+
+``--priority`` / ``--deadline`` / ``--step-budget`` route submissions
+through ``serving.scheduler.DeadlineScheduler``: admission control
+projects each request's completion on the engine's virtual (perfmodel)
+clock and jointly picks its (operating point, step count) -- urgent
+requests get overclocked or step-trimmed, hopeless ones are rejected,
+background ones keep the energy-saving ladder. See docs/scheduler.md.
+
+``--stream K`` streams each batch: a latent preview is yielded for every
+live request after each K denoising steps, before the final results --
+final latents are bit-identical to the unstreamed path.
 
 ``--sharded`` spreads each micro-batch across every local device on a
 (data, model) mesh (``--model-parallel`` sets the model-axis width) via
@@ -29,9 +39,66 @@ import argparse
 import time
 from typing import Optional, Sequence
 
-from repro.serving import DriftServeEngine
-from repro.serving.request import REQUEST_OPS
-from repro.serving.sharded import ShardedDriftServeEngine, make_engine
+from repro.core import dvfs as dvfs_lib
+from repro.serving import (DeadlineScheduler, DriftServeEngine, PreviewEvent,
+                           ShardedDriftServeEngine, make_engine)
+from repro.serving.request import REQUEST_OPS, REQUEST_PRIORITIES
+
+# Derived from code so --help can never drift out of sync with the ladder
+# (tools/check_help_sync.py asserts every name appears in the help text).
+OP_LADDER_HELP = " -> ".join(p.name for p in dvfs_lib.OP_LADDER)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="Serve DRIFT diffusion requests through one "
+                    "continuous-batching engine.",
+        epilog=f"DVFS ladder (op 'auto', walked by the BER monitor): "
+               f"{OP_LADDER_HELP}. Scheduling (--priority/--deadline/"
+               f"--step-budget) and streaming (--stream) are documented in "
+               f"docs/scheduler.md.")
+    ap.add_argument("--arch", default="dit-xl-512")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="micro-batch bucket size")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to submit (0 = one bucket's worth)")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--mode", default="drift",
+                    choices=["clean", "faulty", "drift", "thundervolt",
+                             "approx_abft", "dmr", "stat_abft"])
+    ap.add_argument("--op", default="undervolt", choices=list(REQUEST_OPS),
+                    help="DVFS operating point; 'auto' walks the BER-monitor "
+                         f"ladder core.dvfs.OP_LADDER ({OP_LADDER_HELP})")
+    ap.add_argument("--interval", type=int, default=10,
+                    help="rollback checkpoint-refresh interval (steps)")
+    ap.add_argument("--taylorseer", action="store_true")
+    ap.add_argument("--priority", default="standard",
+                    choices=list(REQUEST_PRIORITIES),
+                    help="scheduling class for all submitted requests; "
+                         "interactive buckets form before standard before "
+                         "background")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="per-request relative deadline in engine virtual "
+                         "(perfmodel) seconds; enables deadline-aware "
+                         "admission control -- requests get overclocked or "
+                         "step-trimmed to fit, or rejected when hopeless")
+    ap.add_argument("--step-budget", type=int, default=None, metavar="N",
+                    help="cap denoising steps per request (DiffPro-style "
+                         "quality/latency knob; the scheduler may trim "
+                         "further for a deadline)")
+    ap.add_argument("--stream", type=int, default=0, metavar="K",
+                    help="stream a latent preview every K denoising steps "
+                         "(0 = off); final latents are bit-identical to "
+                         "the unstreamed path")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard each micro-batch across the local device "
+                         "mesh (single device: plain engine)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="mesh model-axis width for --sharded")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
 
 
 def build_engine(args) -> DriftServeEngine:
@@ -46,54 +113,60 @@ def build_engine(args) -> DriftServeEngine:
 
 def main(argv: Optional[Sequence[str]] = None,
          engine: Optional[DriftServeEngine] = None) -> list:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="dit-xl-512")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=2,
-                    help="micro-batch bucket size")
-    ap.add_argument("--requests", type=int, default=0,
-                    help="requests to submit (0 = one bucket's worth)")
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--mode", default="drift",
-                    choices=["clean", "faulty", "drift", "thundervolt",
-                             "approx_abft", "dmr", "stat_abft"])
-    ap.add_argument("--op", default="undervolt", choices=list(REQUEST_OPS),
-                    help="DVFS operating point; 'auto' walks "
-                         "core.dvfs.OP_LADDER via the BER monitor")
-    ap.add_argument("--interval", type=int, default=10,
-                    help="rollback checkpoint-refresh interval (steps)")
-    ap.add_argument("--taylorseer", action="store_true")
-    ap.add_argument("--sharded", action="store_true",
-                    help="shard each micro-batch across the local device "
-                         "mesh (single device: plain engine)")
-    ap.add_argument("--model-parallel", type=int, default=1,
-                    help="mesh model-axis width for --sharded")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    args = build_parser().parse_args(argv)
 
     eng = engine if engine is not None else build_engine(args)
     if isinstance(eng, ShardedDriftServeEngine):
         print(f"[serve] mesh {dict(eng.mesh.shape)}")
     bucket = eng.batcher.bucket        # an injected engine's bucket wins
     n_requests = args.requests or bucket
+
+    use_scheduler = (args.deadline is not None
+                     or args.priority != "standard"
+                     or args.step_budget is not None)
+    sched = DeadlineScheduler(eng) if use_scheduler else None
+    fields = dict(arch=args.arch, smoke=args.smoke, steps=args.steps,
+                  mode=args.mode, op=args.op, taylorseer=args.taylorseer,
+                  rollback_interval=args.interval)
     for i in range(n_requests):
-        eng.submit(arch=args.arch, smoke=args.smoke, steps=args.steps,
-                   mode=args.mode, op=args.op, seed=args.seed + i,
-                   taylorseer=args.taylorseer,
-                   rollback_interval=args.interval)
+        if sched is not None:
+            adm = sched.submit(seed=args.seed + i, priority=args.priority,
+                               deadline_s=args.deadline,
+                               step_budget=args.step_budget, **fields)
+            print(f"[admission] req {adm.request_id}: {adm.action} "
+                  f"(op {adm.op}, {adm.steps} steps)"
+                  + (f" -- {adm.reason}" if adm.reason else ""))
+        else:
+            eng.submit(seed=args.seed + i, **fields)
+
     t0 = time.time()
-    results = eng.run()
+    results = []
+    previews = 0
+    if args.stream:
+        for ev in eng.run_stream(args.stream):
+            if isinstance(ev, PreviewEvent):
+                previews += 1
+                print(f"  [preview] req {ev.request_id} step "
+                      f"{ev.step}/{ev.total_steps}")
+            else:
+                results.append(ev)
+        results.sort(key=lambda r: r.request_id)
+    else:
+        results = eng.run()
     wall = time.time() - t0
 
     print(f"[serve] {args.arch} mode={args.mode} op={args.op} "
           f"steps={args.steps} requests={n_requests} bucket={bucket} "
-          f"wall={wall:.1f}s")
+          f"wall={wall:.1f}s"
+          + (f" previews={previews}" if args.stream else ""))
     for r in results:
-        print(f"  req {r.request_id} (batch {r.batch_index}, op {r.op}): "
+        miss = "  DEADLINE MISSED" if r.deadline_missed else ""
+        print(f"  req {r.request_id} (batch {r.batch_index}, op {r.op}, "
+              f"{r.priority}): "
               f"lpips-proxy {r.lpips_vs_clean:.4f}  "
               f"psnr {r.psnr_vs_clean_db:.2f} dB  "
               f"corrected(batch) {r.batch_corrected_elems}  "
-              f"evals {r.n_model_evals}")
+              f"evals {r.n_model_evals}{miss}")
         print(f"    perfmodel/request: baseline "
               f"{r.baseline_energy_j:.2f}J/{r.baseline_latency_s:.3f}s -> "
               f"{r.energy_j:.2f}J/{r.latency_s:.3f}s "
@@ -103,7 +176,14 @@ def main(argv: Optional[Sequence[str]] = None,
           f"hits, {eng.stats.batches} batches, "
           f"{eng.stats.padded_slots} padded slots; monitor "
           f"ber={float(eng.monitor.ema_ber):.2e} "
-          f"ladder={int(eng.monitor.op_index)}")
+          f"ladder={int(eng.monitor.op_index)}; clock {eng.clock_s:.3f}s, "
+          f"{eng.stats.deadline_misses} deadline misses")
+    if sched is not None:
+        s = sched.stats
+        print(f"  scheduler: {s.admitted}/{s.submitted} admitted "
+              f"({s.rejected} rejected, {s.escalated_op} op-escalated, "
+              f"{s.trimmed_steps} step-trimmed, {s.projected_misses} "
+              f"projected misses)")
     return results
 
 

@@ -1,5 +1,6 @@
 """Batched DRIFT serving: request queue, micro-batcher, compiled-sampler
-cache, and the single-process engine tying them together.
+cache, the single-process engine tying them together, and the deadline-
+aware scheduling layer on top.
 
 Public API (see ``engine.DriftServeEngine`` for the full contract)::
 
@@ -10,27 +11,49 @@ Public API (see ``engine.DriftServeEngine`` for the full contract)::
     engine.submit(steps=10, mode="drift", op="auto", seed=1)
     results = engine.run()          # List[RequestResult], submission order
 
+    for ev in engine.run_stream(preview_interval=2):
+        ...                         # PreviewEvents, then RequestResults
+
 ``ShardedDriftServeEngine`` (or the ``make_engine`` factory, which degrades
 to the single-device engine when there is one device) runs the same loop
 with each micro-batch sharded across a device mesh -- see
 ``repro.serving.sharded`` and docs/serving.md.
 
-Each distinct (arch, steps, mode, operating point, bucket, mesh) configuration
-compiles exactly once per process (``engine.cache.traces`` counts actual
-JAX traces); the BER monitor persists across batches and feeds requests
-that pick their DVFS operating point with ``op="auto"``.
+``DeadlineScheduler`` wraps either engine with admission control, a joint
+(DVFS operating point, step budget) policy, and priority-bucketed batch
+formation -- see ``repro.serving.scheduler`` and docs/scheduler.md::
+
+    from repro.serving import DeadlineScheduler
+
+    sched = DeadlineScheduler(engine)
+    adm = sched.submit(steps=10, mode="drift", op="auto",
+                       priority="interactive", deadline_s=0.08)
+    print(adm.action, adm.op, adm.steps)        # e.g. trimmed-steps
+    results = sched.run()
+
+Each distinct (arch, steps, mode, operating point, bucket, stream, mesh)
+configuration compiles exactly once per process (``engine.cache.traces``
+counts actual JAX traces); the BER monitor persists across batches and
+feeds requests that pick their DVFS operating point with ``op="auto"``.
 """
 from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
 from repro.serving.engine import OP_BY_NAME, DriftServeEngine, EngineStats
-from repro.serving.request import (REQUEST_OPS, GenerationRequest,
-                                   RequestQueue, RequestResult)
+from repro.serving.request import (PRIORITY_RANK, REQUEST_OPS,
+                                   REQUEST_PRIORITIES, GenerationRequest,
+                                   PreviewEvent, RequestQueue, RequestResult)
+from repro.serving.scheduler import (Admission, DeadlineScheduler,
+                                     PriorityMicroBatcher, SchedulerConfig,
+                                     SchedulerStats)
 from repro.serving.sharded import ShardedDriftServeEngine, make_engine
 
 __all__ = [
     "DriftServeEngine", "ShardedDriftServeEngine", "make_engine",
     "EngineStats", "OP_BY_NAME",
-    "GenerationRequest", "RequestQueue", "RequestResult", "REQUEST_OPS",
+    "GenerationRequest", "RequestQueue", "RequestResult", "PreviewEvent",
+    "REQUEST_OPS", "REQUEST_PRIORITIES", "PRIORITY_RANK",
     "MicroBatch", "MicroBatcher", "request_key",
     "CompiledSamplerCache", "SamplerKey",
+    "DeadlineScheduler", "PriorityMicroBatcher", "SchedulerConfig",
+    "SchedulerStats", "Admission",
 ]

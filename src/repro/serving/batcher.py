@@ -1,12 +1,27 @@
-"""Micro-batcher: groups FIFO requests into fixed-size same-config buckets.
+"""Micro-batcher: groups pending requests into fixed-size same-config
+buckets.
 
-Requests only share a sampler invocation when they resolve to the same
-``SamplerKey`` (same arch/steps/mode/op/...), so batches are formed by
-taking the head request's key and sweeping the queue for up to ``bucket``
-matches; later non-matching requests keep their queue position. A short
-final group is padded up to the bucket size (duplicating the last live
-request's latents downstream) so every compiled sampler sees exactly one
-batch shape -- the whole point of fixed-size buckets.
+The bucketing contract, in full:
+
+* Requests only share a sampler invocation when they resolve to the same
+  ``SamplerKey`` (same arch/steps/mode/resolved op/bucket/stream/mesh
+  placement -- everything that changes the traced computation, see
+  ``cache.SamplerKey``). ``request_key`` is the single place that mapping
+  lives.
+* A batch is formed by taking a *seed* request's key and sweeping the
+  queue (``RequestQueue.take_matching``) for up to ``bucket`` matches, in
+  FIFO order; later non-matching requests keep their queue position. The
+  base ``MicroBatcher`` seeds from the queue head (pure FIFO);
+  ``serving.scheduler.PriorityMicroBatcher`` seeds from the most urgent
+  pending request (priority, then earliest absolute deadline, then FIFO)
+  and inherits everything else.
+* A short final group is padded up to the bucket size (duplicating the
+  last live request's latents downstream) so every compiled sampler sees
+  exactly one batch shape -- the whole point of fixed-size buckets. The
+  padding slots' energy is attributed to the live requests
+  (``perfmodel.energy.per_request_cost``), never hidden.
+* Exactly one bucket is formed per call, so ``op="auto"`` resolution can
+  consult the engine's *live* BER-monitor state between batches.
 """
 from __future__ import annotations
 
@@ -32,6 +47,16 @@ def request_key(req: GenerationRequest, bucket: int, resolved_op: str,
                 extra: Optional[Dict[str, object]] = None) -> SamplerKey:
     """SamplerKey for a request whose operating point is already resolved.
 
+    This is the whole bucketing predicate: two requests co-batch iff their
+    ``request_key``s are equal. Scheduler fields (``priority``,
+    ``deadline_s``, ``submitted_at_s``) deliberately do NOT appear in the
+    key -- urgency decides *when* a bucket forms, not *what* it computes,
+    so an interactive and a background request with the same resolved
+    configuration still share a compiled sampler and a batch. The
+    scheduler's per-request (op, step) assignment lands in the key via the
+    rewritten ``op``/``steps`` fields, which is how a deadline-degraded
+    request ends up in a different bucket than an as-requested one.
+
     Clean mode runs with no DVFS schedule at all, so its op normalizes to
     "": clean requests with different nominal op names share one compiled
     sampler (the same key the engine's clean-reference path uses), and the
@@ -39,7 +64,8 @@ def request_key(req: GenerationRequest, bucket: int, resolved_op: str,
 
     ``extra`` overrides engine-level key fields a request cannot express --
     the sharded engine stamps its (mesh_shape, batch_spec) placement here
-    so two engines on different meshes never alias a compiled fn.
+    so two engines on different meshes never alias a compiled fn, and the
+    streaming path stamps ``stream`` (the preview window) per run.
     """
     key = SamplerKey(arch=req.arch, smoke=req.smoke, steps=req.steps,
                      mode=req.mode,

@@ -2,11 +2,15 @@
 
 The cache key is everything that changes the traced computation -- arch,
 step count, DRIFT mode, operating point (its name pins the DVFS schedule
-baked into the trace), batch bucket, TaylorSeer, rollback interval, and
-(for the sharded engine) the device-mesh placement. Each key jits exactly
-once per process; the ``traces`` counter (driven by
-``sampler.make_sampler``'s ``on_trace`` hook, which only fires while JAX
-stages the function) is the ground truth the serving tests assert on.
+baked into the trace), batch bucket, TaylorSeer, rollback interval,
+streaming window size, and (for the sharded engine) the device-mesh
+placement. Each key jits exactly once per process; the ``traces`` counter
+(driven by ``sampler.make_sampler``'s ``on_trace`` hook, which only fires
+while JAX stages the function) is the ground truth the serving tests
+assert on. One caveat for streamed keys: a streaming sampler jits a
+*window*, so a configuration whose step count is not a multiple of the
+window traces twice (full window + remainder) -- still once per key, per
+distinct window length.
 """
 from __future__ import annotations
 
@@ -32,6 +36,13 @@ class SamplerKey:
     # compiled fn even when every model-side field matches.
     mesh_shape: Tuple[Tuple[str, int], ...] = ()
     batch_spec: str = ""
+    # Streaming preview window in denoising steps; 0 = the one-shot
+    # full-scan sampler. A streamed run compiles a window function instead
+    # of the whole chain, so the two must not alias one cache slot. The
+    # clean-reference path always normalizes this back to 0 (previews never
+    # need a reference, and bit-identity means streamed and one-shot runs
+    # share the same clean sample).
+    stream: int = 0
 
 
 class CompiledSamplerCache:

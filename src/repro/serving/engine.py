@@ -18,7 +18,16 @@ sampler for every batch) with one process-resident engine:
     compiled-sampler cache and reused for quality metrics,
   * per-request quality + energy accounting returned as structured
     ``RequestResult`` records (perfmodel bucket cost split across live
-    requests).
+    requests),
+  * a **virtual clock** (``clock_s``): each served batch advances it by the
+    batch's perfmodel latency, giving deadline semantics a deterministic
+    time base in modeled-accelerator seconds (host wall-clock of a CPU
+    smoke run means nothing),
+  * **streaming** (``run_stream``): the same queue drain, but each batch
+    runs the windowed sampler (``SamplerKey.stream``) and yields
+    ``PreviewEvent`` latent previews between windows before the final
+    ``RequestResult`` records -- with final latents bit-identical to the
+    one-shot ``run()`` path.
 
 Typical use::
 
@@ -27,6 +36,15 @@ Typical use::
         engine.submit(steps=10, mode="drift", op=op, seed=i)
     for res in engine.run():
         print(res.request_id, res.op, res.psnr_vs_clean_db, res.energy_j)
+
+    engine.submit(steps=10, mode="drift", op="auto", seed=3)
+    for ev in engine.run_stream(preview_interval=2):
+        ...   # PreviewEvent previews, then the RequestResult
+
+Deadline-aware admission control, (op, step-budget) degradation, and
+priority batch formation live one layer up in
+``serving/scheduler.DeadlineScheduler`` (see docs/scheduler.md); the bare
+engine only records deadline misses.
 
 The engine is single-threaded by design: batches run sequentially so the
 BER-monitor feedback is well-ordered. ``serving/sharded.py`` extends this
@@ -56,8 +74,8 @@ from repro.diffusion.taylorseer import TaylorSeerConfig
 from repro.perfmodel import energy
 from repro.serving.batcher import MicroBatch, MicroBatcher
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
-from repro.serving.request import (GenerationRequest, RequestQueue,
-                                   RequestResult)
+from repro.serving.request import (GenerationRequest, PreviewEvent,
+                                   RequestQueue, RequestResult)
 from repro.train import steps as steps_lib
 
 # Named operating points a request (or the auto ladder) can resolve to.
@@ -78,6 +96,20 @@ class EngineStats:
     padded_slots: int = 0
     clean_samples_computed: int = 0
     clean_sample_hits: int = 0
+    preview_events: int = 0        # streamed previews yielded (live slots)
+    deadline_misses: int = 0       # requests completed past their deadline
+
+
+@dataclasses.dataclass
+class _BatchCtx:
+    """Everything _prepare_batch stages for one micro-batch run."""
+    batch_index: int
+    params: object
+    padded_seeds: Tuple[int, ...]
+    latents: object
+    cond: object
+    text: object
+    run_key: object
 
 
 class DriftServeEngine:
@@ -100,6 +132,9 @@ class DriftServeEngine:
         self.cache = CompiledSamplerCache()
         self.stats = EngineStats()
         self.monitor = dvfs_lib.ber_monitor_init()
+        # Virtual clock in modeled-accelerator seconds: advanced by each
+        # batch's perfmodel latency. Deadlines/aging are measured on it.
+        self.clock_s = 0.0
         self._base_key = jax.random.PRNGKey(base_seed)
         self._batch_counter = 0
         self._params: Dict[Tuple[str, bool], object] = {}
@@ -111,15 +146,31 @@ class DriftServeEngine:
         self._clean_cache_size = clean_cache_size
         self._sampler_factory = sampler_factory or (
             lambda key, model_cfg, scfg, on_trace:
-            sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace))
+            sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
+                                     stream_window=key.stream))
         self._energy_model = energy_model
         self._full_cfgs: Dict[str, object] = {}
 
     # ------------------------------------------------------------- intake
     def submit(self, **fields) -> int:
-        """Queue one generation request; returns its request id."""
+        """Queue one generation request; returns its request id.
+
+        Normalization the engine applies before enqueueing:
+
+        * ``arch``/``smoke`` default to the engine's;
+        * ``steps`` is clamped to ``step_budget`` when one is given (the
+          DiffPro-style per-request quality/latency knob -- fewer denoising
+          steps, cheaper request);
+        * ``submitted_at_s`` is stamped with the engine's virtual clock
+          (callers normally leave it unset), anchoring deadline-miss
+          accounting and scheduler aging.
+        """
         fields.setdefault("arch", self.default_arch)
         fields.setdefault("smoke", self.default_smoke)
+        budget = fields.get("step_budget")
+        if budget is not None:
+            fields["steps"] = min(fields.get("steps", 10), budget)
+        fields.setdefault("submitted_at_s", self.clock_s)
         family = configs.get_config(fields["arch"]).family
         if family not in ("dit", "unet"):
             raise ValueError(
@@ -138,6 +189,24 @@ class DriftServeEngine:
             for res in self._run_batch(mb):
                 results[res.request_id] = res
         return [results[rid] for rid in sorted(results)]
+
+    def run_stream(self, preview_interval: int = 1):
+        """Drain the queue as a generator of streamed events.
+
+        Per micro-batch: a ``PreviewEvent`` for every live request after
+        each ``preview_interval`` denoising steps (the sampler's chunked
+        scan window), then the batch's ``RequestResult`` records. Events
+        arrive in batch-formation order (priority order under the
+        scheduler), not globally sorted by request id -- streaming exists
+        to surface results early, so no cross-batch reordering happens.
+        Final latents are bit-identical to the ``run()`` path; a streamed
+        configuration gets its own compiled-sampler cache slot
+        (``SamplerKey.stream = preview_interval``).
+        """
+        assert preview_interval >= 1, preview_interval
+        while len(self.queue):
+            mb = self.batcher.next_batch(self.queue, self._resolve_op)
+            yield from self._run_batch_stream(mb, preview_interval)
 
     def _resolve_op(self, req: GenerationRequest) -> str:
         if req.op == "auto":
@@ -203,7 +272,9 @@ class DriftServeEngine:
         """Error-free reference latents for this batch, cached by
         (configuration, latent seeds): the compiled clean sampler jits once
         per configuration and each unique input batch samples once."""
-        ckey = dataclasses.replace(key, mode="clean", op="")
+        # stream=0: previews never need a reference, and streamed finals
+        # are bit-identical to one-shot, so both share one clean sample.
+        ckey = dataclasses.replace(key, mode="clean", op="", stream=0)
         sample_id = (ckey, seeds)
         cached = self._clean_samples.get(sample_id)
         if cached is not None:
@@ -231,7 +302,9 @@ class DriftServeEngine:
         return self._full_cfgs[arch]
 
     # ---------------------------------------------------------- one batch
-    def _run_batch(self, mb: MicroBatch) -> List[RequestResult]:
+    def _prepare_batch(self, mb: MicroBatch) -> _BatchCtx:
+        """Stage params + stacked inputs for one micro-batch (shared by the
+        one-shot and streaming execution paths)."""
         key = mb.key
         batch_index = self._batch_counter
         self._batch_counter += 1
@@ -244,10 +317,54 @@ class DriftServeEngine:
         padded_seeds = tuple(live_seeds + [live_seeds[-1]] * mb.n_pad)
         latents, cond, text = self._batch_inputs(model_cfg,
                                                  list(padded_seeds))
-
-        fn = self.cache.get(key, self._build_sampler)
         run_key = jax.random.fold_in(self._base_key, batch_index)
-        out = fn(params, run_key, latents, cond, text, self.monitor)
+        return _BatchCtx(batch_index=batch_index, params=params,
+                         padded_seeds=padded_seeds, latents=latents,
+                         cond=cond, text=text, run_key=run_key)
+
+    def _run_batch(self, mb: MicroBatch) -> List[RequestResult]:
+        ctx = self._prepare_batch(mb)
+        fn = self.cache.get(mb.key, self._build_sampler)
+        out = fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond, ctx.text,
+                 self.monitor)
+        return self._finish_batch(mb, ctx, out)
+
+    def _run_batch_stream(self, mb: MicroBatch, preview_interval: int):
+        """Streaming twin of ``_run_batch``: run the windowed sampler for
+        this bucket, yielding per-request ``PreviewEvent``s between windows,
+        then the batch's ``RequestResult``s. The compiled-fn cache slot is
+        keyed with ``stream=preview_interval``; everything downstream
+        (metrics, energy, monitor carry) reuses the one-shot path, so a
+        streamed request's result record is indistinguishable from an
+        unstreamed one apart from having produced previews on the way."""
+        ctx = self._prepare_batch(mb)
+        skey = dataclasses.replace(mb.key, stream=preview_interval)
+        fn = self.cache.get(skey, self._build_sampler)
+        out = None
+        for ev in fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
+                     ctx.text, self.monitor):
+            if isinstance(ev, sampler_lib.SampleOutput):
+                out = ev
+                break               # terminating item; nothing follows
+            preview = jnp.clip(ev.latents, -1, 1)
+            for slot, req in enumerate(mb.requests):   # live slots only
+                self.stats.preview_events += 1
+                yield PreviewEvent(request_id=req.request_id,
+                                   batch_index=ctx.batch_index,
+                                   step=int(ev.step),
+                                   total_steps=mb.key.steps,
+                                   latents=preview[slot])
+        assert out is not None, "streaming sampler ended without SampleOutput"
+        yield from self._finish_batch(mb, ctx, out)
+
+    def _finish_batch(self, mb: MicroBatch, ctx: _BatchCtx,
+                      out: sampler_lib.SampleOutput) -> List[RequestResult]:
+        """Metrics, energy attribution, monitor/clock carry, and per-request
+        result records for a completed batch."""
+        key = mb.key
+        batch_index = ctx.batch_index
+        params, padded_seeds = ctx.params, ctx.padded_seeds
+        latents, cond, text = ctx.latents, ctx.cond, ctx.text
         if key.mode in _MONITORED_MODES:
             self.monitor = out.monitor   # Sec 5.1 carry-over across batches
 
@@ -288,9 +405,17 @@ class DriftServeEngine:
                                        batch=key.bucket, n_live=n_live,
                                        em=em)
 
+        # advance the virtual clock by the batch's (shared) modeled latency;
+        # every request in the bucket completes at the new timestamp
+        self.clock_s += cost["latency_s"]
+        completed_at = self.clock_s
+
         results = []
         for slot, req in enumerate(mb.requests):
             a, b = img[slot:slot + 1], clean[slot:slot + 1]
+            missed = (req.absolute_deadline_s is not None
+                      and completed_at > req.absolute_deadline_s + 1e-9)
+            self.stats.deadline_misses += int(missed)
             results.append(RequestResult(
                 request_id=req.request_id,
                 batch_index=batch_index,
@@ -309,5 +434,12 @@ class DriftServeEngine:
                 monitor_ber=mon_ber,
                 monitor_op_index=mon_idx,
                 latents=a[0],
+                priority=req.priority,
+                deadline_s=req.deadline_s,
+                completed_at_s=completed_at,
+                queue_wait_s=max(
+                    completed_at - req.submitted_at_s - cost["latency_s"],
+                    0.0),
+                deadline_missed=missed,
             ))
         return results

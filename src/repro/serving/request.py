@@ -3,9 +3,20 @@
 A ``GenerationRequest`` is one user-facing generation job: which diffusion
 arch to run, how many DDIM steps, which DRIFT protection mode, and which
 DVFS operating point -- ``"auto"`` delegates the choice to the engine's
-shared BER-monitor ladder (Sec 5.1). Results come back as structured
-``RequestResult`` records (quality vs the clean reference, energy/latency
-attribution, monitor state) instead of prints.
+shared BER-monitor ladder (Sec 5.1). Since PR 3 a request also carries its
+*scheduling* contract -- ``priority``, ``deadline_s``, ``step_budget`` --
+which the deadline-aware scheduler (``serving/scheduler.py``) turns into a
+concrete (operating point, step count) assignment at admission time.
+Results come back as structured ``RequestResult`` records (quality vs the
+clean reference, energy/latency attribution, monitor state, deadline
+bookkeeping) instead of prints; streaming runs additionally yield
+``PreviewEvent`` records between denoising windows.
+
+Time base: deadlines and completion stamps are measured on the engine's
+**virtual clock** (``DriftServeEngine.clock_s``), which advances by the
+perfmodel latency of each served batch -- i.e. seconds on the *modeled
+accelerator*, not host wall-clock. That keeps deadline semantics
+meaningful (the host runs smoke models on CPU) and deterministic in tests.
 """
 from __future__ import annotations
 
@@ -18,6 +29,13 @@ from repro.core.exec_ctx import MODES
 # Operating points a request may name; "auto" resolves against the engine's
 # BER-monitor ladder at batch-formation time.
 REQUEST_OPS = ("nominal", "undervolt", "overclock", "auto")
+
+# Scheduling classes, most to least urgent. The priority batcher serves
+# "interactive" buckets before "standard" before "background"; within a
+# class, earlier deadlines first, then FIFO. Background requests are the
+# ones the scheduler may leave on the energy-saving DVFS ladder.
+REQUEST_PRIORITIES = ("interactive", "standard", "background")
+PRIORITY_RANK = {name: i for i, name in enumerate(REQUEST_PRIORITIES)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +50,19 @@ class GenerationRequest:
     seed: int = 0                  # drives this request's initial latents
     taylorseer: bool = False
     rollback_interval: int = 10
+    # --- scheduling contract (see serving/scheduler.py, docs/scheduler.md)
+    priority: str = "standard"     # REQUEST_PRIORITIES member
+    # Relative deadline in engine virtual seconds (perfmodel time) counted
+    # from submission; None = no deadline. The plain engine only *accounts*
+    # misses; admission control / degradation needs the DeadlineScheduler.
+    deadline_s: Optional[float] = None
+    # User-requested cap on denoising steps (DiffPro-style quality knob).
+    # The engine clamps ``steps`` to it at submit(); the scheduler may trim
+    # further (never below its ``min_steps``) to meet a deadline.
+    step_budget: Optional[int] = None
+    # Engine virtual-clock stamp at submission; set by the engine, used for
+    # deadline-miss accounting and scheduler aging. Not a user field.
+    submitted_at_s: float = 0.0
 
     def __post_init__(self):
         if self.op not in REQUEST_OPS:
@@ -40,6 +71,35 @@ class GenerationRequest:
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown DRIFT mode {self.mode!r}; one of {MODES}")
+        if self.priority not in REQUEST_PRIORITIES:
+            raise ValueError(
+                f"unknown priority {self.priority!r}; one of "
+                f"{REQUEST_PRIORITIES}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+        if self.step_budget is not None and self.step_budget < 1:
+            raise ValueError(
+                f"step_budget must be >= 1, got {self.step_budget}")
+
+    @property
+    def absolute_deadline_s(self) -> Optional[float]:
+        """Deadline on the engine's virtual clock, or None."""
+        if self.deadline_s is None:
+            return None
+        return self.submitted_at_s + self.deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class PreviewEvent:
+    """One streamed intermediate result: a request's slot of the batch
+    latents after ``step`` of ``total_steps`` denoising steps. Yielded by
+    ``DriftServeEngine.run_stream`` between windows; the matching
+    ``RequestResult`` follows once the batch finishes."""
+    request_id: int
+    batch_index: int
+    step: int                      # completed denoising steps (1-based)
+    total_steps: int
+    latents: object                # (H, W, C), clipped to [-1, 1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,16 +134,31 @@ class RequestResult:
     # clipped to [-1, 1], shape (H, W, C). Optional so metric-only fakes in
     # tests stay cheap; the real engine always fills it.
     latents: Optional[object] = None
+    # --- deadline bookkeeping (engine virtual clock, see module docstring)
+    priority: str = "standard"
+    deadline_s: Optional[float] = None     # the request's relative deadline
+    completed_at_s: float = 0.0            # engine clock after this batch
+    queue_wait_s: float = 0.0              # completed_at - submitted - batch
+    deadline_missed: bool = False
 
 
 class RequestQueue:
-    """FIFO queue assigning monotonically increasing request ids."""
+    """FIFO queue assigning monotonically increasing request ids.
+
+    The queue itself stays strictly FIFO; *scheduling order* is imposed from
+    outside via ``take_matching``, which can extract any same-configuration
+    subset while preserving the relative order of everything left behind.
+    The priority batcher (``serving.scheduler.PriorityMicroBatcher``) picks
+    its bucket seed from ``pending()`` and leaves FIFO as the tie-break.
+    """
 
     def __init__(self) -> None:
         self._pending: Deque[GenerationRequest] = collections.deque()
         self._next_id = 0
 
     def submit(self, **fields) -> int:
+        """Append one request, assigning the next id. ``fields`` are
+        ``GenerationRequest`` fields (validated by its ``__post_init__``)."""
         req = GenerationRequest(request_id=self._next_id, **fields)
         self._next_id += 1
         self._pending.append(req)
@@ -93,13 +168,49 @@ class RequestQueue:
         return len(self._pending)
 
     def peek(self) -> Optional[GenerationRequest]:
+        """Head of the FIFO without removing it; None when empty."""
         return self._pending[0] if self._pending else None
 
-    def take_matching(self, head_key, key_of, limit: int
+    def pending(self) -> tuple:
+        """Immutable snapshot of pending requests in FIFO order. Used by
+        priority batch formation and admission-control backlog projection;
+        mutating the queue invalidates nothing (the snapshot is a copy)."""
+        return tuple(self._pending)
+
+    def take_matching(self, head_key, key_of, limit: int, rank=None
                       ) -> List[GenerationRequest]:
         """Pop up to ``limit`` pending requests whose ``key_of(req)`` equals
-        ``head_key``, scanning in FIFO order (later non-matching requests
-        keep their place)."""
+        ``head_key``.
+
+        This is the bucketing primitive: ``key_of`` is the batcher's
+        resolved ``SamplerKey`` function, so "matching" means *may share a
+        compiled sampler invocation* (same arch/steps/mode/resolved op/
+        bucket/mesh placement -- see ``batcher.request_key``). Guarantees:
+
+        * without ``rank``, matches are chosen AND returned in FIFO order
+          (submission order within the configuration);
+        * with ``rank`` (the priority batcher's urgency key), the ``limit``
+          *most urgent* matches are chosen -- an interactive request and a
+          background request share a key, and an urgent seed must not pull
+          older background work into its bucket ahead of its peers. Ties
+          break FIFO (the sort is stable), and the returned bucket is
+          re-ordered FIFO so slot assignment stays deterministic;
+        * non-matching (and unchosen matching) requests keep their
+          relative queue positions -- a later bucket for their
+          configuration sees them in the original order;
+        * ``head_key`` need not belong to the queue head: the priority
+          batcher seeds it from the most urgent pending request, and the
+          scan still sweeps the whole queue for co-batchable matches;
+        * at most ``limit`` (the bucket size) requests are taken, even if
+          more match; the remainder stay queued for the next bucket.
+        """
+        if rank is not None:
+            matches = [r for r in self._pending if key_of(r) == head_key]
+            chosen = sorted(matches, key=rank)[:limit]
+            chosen_ids = {r.request_id for r in chosen}
+            self._pending = collections.deque(
+                r for r in self._pending if r.request_id not in chosen_ids)
+            return sorted(chosen, key=lambda r: r.request_id)
         taken: List[GenerationRequest] = []
         kept: Deque[GenerationRequest] = collections.deque()
         while self._pending and len(taken) < limit:

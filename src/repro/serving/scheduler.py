@@ -1,0 +1,320 @@
+"""Deadline- and priority-aware scheduling on top of the DRIFT engine.
+
+The engine gives every request two orthogonal quality/cost levers:
+
+* the **DVFS operating point** (DRIFT Sec 5.1/5.2): undervolt saves ~36%
+  energy at equal speed, overclock runs ~1.75x faster at nominal-ish
+  energy -- reliability is bought back by ABFT + rollback either way;
+* the **denoising step budget** (DiffPro-style): fewer DDIM steps cost
+  proportionally less latency and energy at some quality loss.
+
+``DeadlineScheduler`` navigates both jointly, per request, against an
+admission-control projection of the queue:
+
+1.  **Projection.** A request's completion time is estimated on the
+    engine's virtual clock as ``clock + backlog + own batch latency``,
+    where every term comes from the same perfmodel the engine bills with
+    (``perfmodel.energy.run_cost``), so projections and the clock that
+    later judges them are mutually consistent. The backlog counts only
+    pending requests that will be served *before* the newcomer under
+    priority order.
+2.  **Policy.** Given the time left after the backlog, pick (op, steps):
+    keep the request as submitted if it fits; otherwise escalate the
+    operating point to ``overclock`` (speed mode); otherwise trim steps at
+    overclock down to ``SchedulerConfig.min_steps``; otherwise the request
+    is hopeless -- reject it (default) or admit it flagged as a projected
+    miss. Requests without a deadline are never touched: background work
+    keeps its energy-saving ladder (``op="auto"`` stays auto).
+3.  **Formation.** ``PriorityMicroBatcher`` seeds each bucket from the
+    most urgent pending request -- (priority rank, absolute deadline,
+    FIFO) -- instead of the queue head, with an aging escape hatch: any
+    request that has waited longer than ``age_s`` virtual seconds is
+    promoted to top rank, so a steady interactive stream cannot starve
+    background work forever.
+
+The scheduler *rewrites* the admitted request's ``op``/``steps`` fields,
+so its assignment flows into ``SamplerKey`` bucketing and the perfmodel
+accounting with no engine changes; ``priority``/``deadline_s`` ride along
+for formation order and miss bookkeeping. Everything is deterministic:
+time is the engine's virtual clock (modeled-accelerator seconds), never
+host wall-clock.
+
+Worked example and the full policy table: ``docs/scheduler.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core import dvfs as dvfs_lib
+from repro.perfmodel import energy
+from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
+from repro.serving.engine import OP_BY_NAME, DriftServeEngine
+from repro.serving.request import (PRIORITY_RANK, GenerationRequest,
+                                   RequestQueue)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs for admission control and batch formation."""
+    # Floor for deadline-driven step trimming: below this the sample is
+    # assumed too degraded to be worth serving (DiffPro's observation that
+    # quality collapses under a handful of steps).
+    min_steps: int = 4
+    # Reject requests whose deadline cannot be met even at (overclock,
+    # min_steps); False admits them flagged as projected misses instead.
+    reject_hopeless: bool = True
+    # A pending request older than this (virtual seconds) is treated as
+    # top priority by the batcher regardless of its class -- the
+    # starvation guard. None disables aging.
+    age_s: Optional[float] = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """Outcome of one admission decision."""
+    admitted: bool
+    # Concrete assignment for admitted requests (echoes the request for
+    # rejected ones, for the record).
+    op: str
+    steps: int
+    # "as-requested" | "escalated-op" | "trimmed-steps" | "projected-miss"
+    # | "rejected"
+    action: str
+    # Projected wait behind the existing queue and projected completion
+    # latency (wait + own batch), both in engine virtual seconds. None
+    # when the request has no deadline (no projection is computed).
+    projected_wait_s: Optional[float] = None
+    projected_total_s: Optional[float] = None
+    request_id: int = -1           # -1 = rejected, never enqueued
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    escalated_op: int = 0          # op bumped to overclock for a deadline
+    trimmed_steps: int = 0         # step budget cut for a deadline
+    projected_misses: int = 0      # admitted although projected to miss
+
+
+class PriorityMicroBatcher(MicroBatcher):
+    """MicroBatcher that seeds each bucket from the most urgent pending
+    request instead of the FIFO head.
+
+    Urgency is whatever ``urgency(req)`` sorts first -- the scheduler
+    supplies (priority rank with aging, absolute deadline, request id).
+    The seed's resolved ``SamplerKey`` is swept through the whole queue
+    (``take_matching``) and the bucket is filled with the most urgent
+    matches (scheduler fields are not part of the key, so an interactive
+    and a background request share a configuration -- the urgency ranking,
+    not FIFO, decides who rides the urgent bucket). Non-matching and
+    unchosen requests keep their FIFO positions.
+    """
+
+    def __init__(self, bucket: int,
+                 key_extra: Optional[Dict[str, object]] = None,
+                 urgency: Optional[Callable[[GenerationRequest], Tuple]]
+                 = None) -> None:
+        super().__init__(bucket, key_extra=key_extra)
+        self._urgency = urgency or (lambda r: r.request_id)
+
+    def next_batch(self, queue: RequestQueue,
+                   resolve_op: Callable[[GenerationRequest], str]
+                   ) -> MicroBatch:
+        pending = queue.pending()
+        assert pending, "next_batch on an empty queue"
+        seed = min(pending, key=self._urgency)
+        key_of = lambda r: request_key(r, self.bucket, resolve_op(r),
+                                       self.key_extra)
+        key = key_of(seed)
+        reqs = queue.take_matching(key, key_of, self.bucket,
+                                   rank=self._urgency)
+        return MicroBatch(key=key, requests=reqs)
+
+
+class DeadlineScheduler:
+    """Admission control + priority batch formation around one engine.
+
+    Wraps an existing ``DriftServeEngine`` (or the sharded subclass):
+    replaces its batcher with a ``PriorityMicroBatcher`` and funnels
+    submissions through :meth:`submit`, which returns an :class:`Admission`
+    record instead of a bare id. ``run()``/``run_stream()`` delegate to the
+    engine unchanged -- results and previews come back exactly as without
+    the scheduler, plus the deadline bookkeeping the engine already stamps.
+
+    With no deadlines and uniform priorities the scheduler is behaviorally
+    identical to the bare engine (the urgency sort degenerates to FIFO),
+    so launchers can wrap unconditionally.
+    """
+
+    def __init__(self, engine: DriftServeEngine,
+                 config: Optional[SchedulerConfig] = None) -> None:
+        self.engine = engine
+        self.cfg = config or SchedulerConfig()
+        self.stats = SchedulerStats()
+        engine.batcher = PriorityMicroBatcher(
+            engine.batcher.bucket, key_extra=engine.batcher.key_extra,
+            urgency=self._urgency)
+        # (arch, op name, steps) -> modeled bucket latency, memoized --
+        # run_cost is pure arithmetic but admission sits on the submit path.
+        self._latency_cache: Dict[Tuple[str, str, int], float] = {}
+
+    # ------------------------------------------------------------- intake
+    def submit(self, **fields) -> Admission:
+        """Plan and (maybe) enqueue one request; returns the decision.
+
+        ``fields`` are ``GenerationRequest`` fields as for
+        ``engine.submit``. Admitted requests are enqueued with the planned
+        ``(op, steps)`` rewritten in; rejected ones never touch the queue.
+        """
+        self.stats.submitted += 1
+        eng = self.engine
+        fields.setdefault("arch", eng.default_arch)
+        fields.setdefault("smoke", eng.default_smoke)
+        fields.setdefault("submitted_at_s", eng.clock_s)
+        # Probe request: normalizes defaults + runs field validation once.
+        probe = GenerationRequest(request_id=-1, **fields)
+        adm = self.plan(probe)
+        if not adm.admitted:
+            self.stats.rejected += 1
+            return adm
+        self.stats.admitted += 1
+        if adm.action == "escalated-op":
+            self.stats.escalated_op += 1
+        elif adm.action == "trimmed-steps":
+            self.stats.trimmed_steps += 1
+        elif adm.action == "projected-miss":
+            self.stats.projected_misses += 1
+        rid = eng.submit(**{**fields, "op": adm.op, "steps": adm.steps})
+        return dataclasses.replace(adm, request_id=rid)
+
+    # ------------------------------------------------------------- policy
+    def plan(self, req: GenerationRequest) -> Admission:
+        """Joint (operating point, step count) assignment for one request.
+
+        Policy ladder, cheapest first (see docs/scheduler.md for the
+        table): as-requested -> overclock at full steps -> overclock with
+        trimmed steps -> reject / projected-miss.
+        """
+        cap = req.steps if req.step_budget is None \
+            else min(req.steps, req.step_budget)
+        if req.deadline_s is None:
+            # No deadline: never touch the energy-saving assignment.
+            return Admission(admitted=True, op=req.op, steps=cap,
+                             action="as-requested")
+        wait = self.projected_wait_s(req)
+        budget = req.deadline_s - wait     # time left for the own batch
+        candidates = [(req.op, cap, "as-requested")]
+        if self._concrete_op(req.op) != "overclock":
+            candidates.append(("overclock", cap, "escalated-op"))
+        for op_name, steps, action in candidates:
+            lat = self.batch_latency_s(req.arch, op_name, steps)
+            if lat <= budget:
+                return Admission(admitted=True, op=op_name, steps=steps,
+                                 action=action, projected_wait_s=wait,
+                                 projected_total_s=wait + lat)
+        floor = min(cap, self.cfg.min_steps)
+        for steps in range(cap - 1, floor - 1, -1):
+            lat = self.batch_latency_s(req.arch, "overclock", steps)
+            if lat <= budget:
+                return Admission(admitted=True, op="overclock", steps=steps,
+                                 action="trimmed-steps",
+                                 projected_wait_s=wait,
+                                 projected_total_s=wait + lat)
+        lat = self.batch_latency_s(req.arch, "overclock", floor)
+        if self.cfg.reject_hopeless:
+            return Admission(
+                admitted=False, op=req.op, steps=cap, action="rejected",
+                projected_wait_s=wait, projected_total_s=wait + lat,
+                reason=(f"projected {wait + lat:.3f}s > deadline "
+                        f"{req.deadline_s:.3f}s even at (overclock, "
+                        f"{floor} steps)"))
+        return Admission(admitted=True, op="overclock", steps=floor,
+                         action="projected-miss", projected_wait_s=wait,
+                         projected_total_s=wait + lat,
+                         reason="admitted past its deadline "
+                                "(reject_hopeless=False)")
+
+    # --------------------------------------------------------- projection
+    def projected_wait_s(self, req: GenerationRequest) -> float:
+        """Modeled time until ``req``'s bucket could start: the batch
+        latencies of every pending request that outranks it, grouped into
+        same-configuration buckets of the engine's bucket size.
+
+        Approximations, on purpose (documented in docs/scheduler.md): the
+        newcomer is assumed to open its own bucket (no co-batching credit),
+        ``auto`` ops are priced at the monitor's current ladder point, and
+        aging promotions between now and formation are ignored. All errors
+        are conservative or second-order for admission purposes.
+        """
+        mine = self._urgency(req, _tiebreak=math.inf)
+        ahead: Dict[Tuple[str, str, int], int] = {}
+        for r in self.engine.queue.pending():
+            if self._urgency(r) < mine:
+                k = (r.arch, self._concrete_op(r.op), r.steps)
+                ahead[k] = ahead.get(k, 0) + 1
+        bucket = self.engine.batcher.bucket
+        wait = 0.0
+        for (arch, op_name, steps), n in ahead.items():
+            n_batches = -(-n // bucket)            # ceil
+            wait += n_batches * self.batch_latency_s(arch, op_name, steps)
+        return wait
+
+    def batch_latency_s(self, arch: str, op_name: str, steps: int) -> float:
+        """Modeled latency of one full bucket of this configuration -- the
+        same ``energy.run_cost`` call (full-size arch, batch = bucket) the
+        engine bills results with and advances its clock by."""
+        key = (arch, op_name, steps)
+        cached = self._latency_cache.get(key)
+        if cached is not None:
+            return cached
+        eng = self.engine
+        op = OP_BY_NAME.get(self._concrete_op(op_name), dvfs_lib.NOMINAL)
+        rc = energy.RunConfig(num_steps=steps,
+                              nominal_steps=eng.nominal_steps,
+                              aggressive=op)
+        cost = energy.run_cost(eng._full_cfg(arch), rc,
+                               batch=eng.batcher.bucket,
+                               em=eng._energy_model_for())
+        self._latency_cache[key] = cost["latency_s"]
+        return cost["latency_s"]
+
+    # ---------------------------------------------------------- formation
+    def _concrete_op(self, op_name: str) -> str:
+        """Resolve "auto" to the monitor's current ladder point for cost
+        estimation (the batcher re-resolves at formation time; the ladder
+        rarely moves between admission and formation, and all ladder points
+        share nominal frequency, so the latency estimate is exact anyway)."""
+        if op_name == "auto":
+            return dvfs_lib.ladder_op(int(self.engine.monitor.op_index)).name
+        return op_name
+
+    def _urgency(self, req: GenerationRequest,
+                 _tiebreak: Optional[float] = None) -> Tuple:
+        """Sort key for batch formation: (priority rank, absolute deadline,
+        FIFO). Aged-out requests jump to rank -1 -- ahead of everything --
+        which is the starvation guard. ``_tiebreak`` overrides the id for
+        not-yet-enqueued probes so equal-urgency incumbents sort ahead."""
+        rank = PRIORITY_RANK[req.priority]
+        if (self.cfg.age_s is not None
+                and self.engine.clock_s - req.submitted_at_s
+                >= self.cfg.age_s):
+            rank = -1
+        dl = req.absolute_deadline_s
+        return (rank, math.inf if dl is None else dl,
+                req.request_id if _tiebreak is None else _tiebreak)
+
+    # ------------------------------------------------------------ serving
+    def run(self):
+        """Drain the queue through the engine (priority formation order,
+        results in submission order -- see ``DriftServeEngine.run``)."""
+        return self.engine.run()
+
+    def run_stream(self, preview_interval: int = 1):
+        """Streaming drain: ``PreviewEvent``s + ``RequestResult``s in
+        priority formation order (see ``DriftServeEngine.run_stream``)."""
+        return self.engine.run_stream(preview_interval)

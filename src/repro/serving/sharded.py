@@ -42,6 +42,12 @@ unconditionally::
     engine.submit(steps=10, mode="drift", op="auto", seed=0)
     results = engine.run()
 
+Streaming (``run_stream``) and the deadline scheduler compose unchanged:
+the windowed sampler pins the same placements at window boundaries, so a
+streamed data-parallel run stays bit-identical to the single-device
+one-shot path (asserted in tests/test_serving_sharded.py), and
+``DeadlineScheduler`` only swaps the batcher -- nothing mesh-related.
+
 Testable on CPU via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 (set before the first jax import); see tests/test_serving_sharded.py and
 docs/serving.md.
@@ -91,7 +97,8 @@ class ShardedDriftServeEngine(DriftServeEngine):
     def _sharded_sampler_factory(self, key: SamplerKey, model_cfg, scfg,
                                  on_trace):
         return sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
-                                        mesh=self.mesh)
+                                        mesh=self.mesh,
+                                        stream_window=key.stream)
 
     def _params_for(self, arch: str, smoke: bool):
         k = (arch, smoke)
@@ -118,6 +125,19 @@ class ShardedDriftServeEngine(DriftServeEngine):
         try:
             with self.mesh:
                 return super()._run_batch(mb)
+        finally:
+            constraints.set_policy(prev)
+
+    def _run_batch_stream(self, mb, preview_interval):
+        # Same mesh/policy bracketing as _run_batch, but held open across
+        # the whole generator: every window (and the consumer code between
+        # yields) runs inside it. The engine is single-threaded, so don't
+        # interleave another engine's batches while a stream is mid-batch.
+        prev = constraints.get_policy()
+        constraints.set_policy(constraints.MeshPolicy(self.mesh))
+        try:
+            with self.mesh:
+                yield from super()._run_batch_stream(mb, preview_interval)
         finally:
             constraints.set_policy(prev)
 

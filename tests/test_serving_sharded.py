@@ -12,8 +12,9 @@ import numpy as np
 import pytest
 
 from repro.launch import mesh as mesh_lib
-from repro.serving import (DriftServeEngine, GenerationRequest,
-                           ShardedDriftServeEngine, make_engine, request_key)
+from repro.serving import (DriftServeEngine, GenerationRequest, PreviewEvent,
+                           RequestResult, ShardedDriftServeEngine,
+                           make_engine, request_key)
 
 needs_mesh = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -139,6 +140,37 @@ def test_sampler_key_grows_mesh_component():
     import dataclasses
     ck = dataclasses.replace(k8, mode="clean", op="")
     assert ck.mesh_shape == k8.mesh_shape
+
+
+@needs_mesh
+def test_streaming_bit_identical_on_sharded_engine(reference):
+    """PR 3 acceptance: a streamed request on the 8-fake-device
+    data-parallel engine yields >= 1 intermediate preview and finishes with
+    latents bit-identical to the single-device NON-streaming reference --
+    streaming and sharding each preserve bit-equality, so together they
+    must too."""
+    _, ref, _ = reference
+    mesh = mesh_lib.make_serving_mesh(model_parallel=1,
+                                      devices=jax.devices()[:BUCKET])
+    eng = ShardedDriftServeEngine(mesh=mesh, bucket=BUCKET)
+    for i in range(N_REQ):
+        eng.submit(steps=STEPS, mode="drift",
+                   op="auto" if i >= 4 else "undervolt", seed=i)
+    events = list(eng.run_stream(preview_interval=1))
+    previews = [e for e in events if isinstance(e, PreviewEvent)]
+    results = sorted((e for e in events if isinstance(e, RequestResult)),
+                     key=lambda r: r.request_id)
+    # STEPS denoising steps, window 1 -> STEPS-1 previews per live request
+    assert len(previews) == (STEPS - 1) * N_REQ
+    assert all(p.step < STEPS for p in previews)
+    assert len(results) == N_REQ
+    for a, b in zip(ref, results):
+        assert a.request_id == b.request_id and a.op == b.op
+        assert np.array_equal(np.asarray(a.latents), np.asarray(b.latents))
+        assert a.n_model_evals == b.n_model_evals
+    # the shared monitor walked the same ladder through the windowed path
+    assert [r.monitor_op_index for r in results] == \
+        [r.monitor_op_index for r in ref]
 
 
 @needs_mesh

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Execute the ``bash`` code blocks in markdown docs so they can't rot.
+
+Usage (what the CI docs job runs, from the repo root):
+
+    python tools/check_docs.py README.md docs/*.md
+
+Rules:
+
+* only fenced blocks whose info string starts with ``bash`` run; plain
+  fences (ASCII diagrams) and other languages (illustrative ``python``)
+  are skipped;
+* a fence marked ``bash no-run`` is skipped (for genuinely
+  environment-specific snippets);
+* lines starting with ``pip install`` are stripped before running -- CI
+  installs dependencies in its own cached step, and doc checks must not
+  hit the network;
+* each block runs as one ``bash -euo pipefail`` script with
+  ``PYTHONPATH=src`` pre-seeded (blocks usually set it themselves too),
+  so multi-line commands with ``\\`` continuations and inline env vars
+  (``XLA_FLAGS=... python ...``) work as written.
+
+Exit code is non-zero on the first failing block, with the block and its
+output echoed for debugging.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+FENCE = re.compile(r"^```(.*)$")
+
+
+def extract_blocks(path: str):
+    """Yield (info_string, body, start_line) for each fenced block."""
+    info, body, start = None, [], 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            m = FENCE.match(line.rstrip("\n"))
+            if m is None:
+                if info is not None:
+                    body.append(line)
+                continue
+            if info is None:
+                info, body, start = m.group(1).strip(), [], lineno
+            else:
+                yield info, "".join(body), start
+                info = None
+    if info is not None:
+        raise SystemExit(f"{path}: unterminated code fence at line {start}")
+
+
+def runnable(info: str) -> bool:
+    parts = info.split()
+    return bool(parts) and parts[0] == "bash" and "no-run" not in parts[1:]
+
+
+def run_block(path: str, body: str, start: int) -> bool:
+    script = "\n".join(ln for ln in body.splitlines()
+                       if not ln.lstrip().startswith("pip install"))
+    if not script.strip():
+        return True
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    print(f"--- {path}:{start} ---")
+    print(script)
+    proc = subprocess.run(["bash", "-euo", "pipefail", "-c", script],
+                          env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        print(proc.stdout)
+        print(proc.stderr, file=sys.stderr)
+        print(f"FAIL {path}:{start} (exit {proc.returncode})",
+              file=sys.stderr)
+        return False
+    tail = proc.stdout.strip().splitlines()[-3:]
+    for ln in tail:
+        print(f"    {ln}")
+    print(f"ok ({path}:{start})")
+    return True
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_docs.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    n_run = 0
+    for path in argv:
+        for info, body, start in extract_blocks(path):
+            if not runnable(info):
+                continue
+            n_run += 1
+            if not run_block(path, body, start):
+                return 1
+    print(f"all {n_run} bash doc blocks ran clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Assert the serving CLIs' --help stays in sync with the code.
+
+Checks, for both ``python -m repro.launch.serve`` and
+``examples/drift_serve.py``:
+
+* every operating point in ``core.dvfs.OP_LADDER`` is named in the help
+  text (the CLIs derive it from the ladder programmatically -- this guard
+  catches someone replacing that with a stale literal);
+* every scheduling/streaming flag the docs advertise is present.
+
+Run from the repo root (CI does: the docs job in
+.github/workflows/ci.yml):
+
+    PYTHONPATH=src python tools/check_help_sync.py
+"""
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+from repro.core.dvfs import OP_LADDER  # noqa: E402
+
+CLIS = (
+    [sys.executable, "-m", "repro.launch.serve", "--help"],
+    [sys.executable, "examples/drift_serve.py", "--help"],
+)
+REQUIRED_FLAGS = ("--op", "--priority", "--deadline", "--step-budget",
+                  "--stream", "--batch", "--steps")
+
+
+def main() -> int:
+    failures = []
+    for cmd in CLIS:
+        out = subprocess.run(cmd, capture_output=True, text=True,
+                             check=True).stdout
+        missing = [p.name for p in OP_LADDER if p.name not in out]
+        missing += [f for f in REQUIRED_FLAGS if f not in out]
+        if missing:
+            failures.append((cmd, missing))
+        else:
+            print(f"ok: {' '.join(cmd[-2:])} help names the full ladder "
+                  f"and all scheduler flags")
+    for cmd, missing in failures:
+        print(f"FAIL {' '.join(cmd)}: --help missing {missing}",
+              file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
