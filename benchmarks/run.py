@@ -23,6 +23,7 @@ MODULES = [
     "fig14_dse",
     "table2_taylorseer",
     "roofline_summary",
+    "serving_telemetry",
 ]
 
 

@@ -1,0 +1,106 @@
+"""Serving-telemetry benchmark: the perf trajectory's first data point.
+
+Drives a mixed-operating-point request stream through the deadline
+scheduler + engine with telemetry on and emits ``BENCH_serving.json``:
+
+* **throughput** -- requests per virtual (modeled-accelerator) second
+  and per host wall second (the wall number is a CPU-smoke artifact;
+  the virtual number is the deterministic one future PRs must not
+  regress);
+* **queue wait** -- p50/p99 virtual-clock wait from the telemetry
+  histogram (submission -> batch start);
+* **estimator vs perfmodel** -- after the stream, the learned latency
+  estimate per (arch, op, steps, bucket) against the perfmodel price
+  for the same configuration: mean/max relative error. The engine bills
+  with per-request overheads (rollback interval, recovery traffic) the
+  scheduler's a-priori perfmodel call does not see, so this gap is
+  exactly what learned admission estimates buy.
+
+Run from the repo root:
+
+    PYTHONPATH=src python -m benchmarks.serving_telemetry
+
+Also registered in ``benchmarks.run``. Output lands in ./BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.perfmodel import energy
+from repro.serving import (DeadlineScheduler, DriftServeEngine,
+                           OP_BY_NAME)
+
+ARCH, STEPS, BUCKET, N_REQ = "dit-xl-512", 4, 2, 8
+OPS = ["undervolt", "overclock", "auto"]
+
+
+def main() -> None:
+    engine = DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET)
+    sched = DeadlineScheduler(engine)
+    for i in range(N_REQ):
+        sched.submit(steps=STEPS, mode="drift", op=OPS[i % len(OPS)],
+                     seed=i)
+    t0 = time.time()
+    results = sched.run()
+    wall_s = time.time() - t0
+
+    tele = engine.telemetry
+    waits = sorted(r.queue_wait_s for r in results)
+    pct = lambda q: waits[min(len(waits) - 1,
+                              int(round(q / 100 * (len(waits) - 1))))]
+
+    # learned estimate vs the scheduler's a-priori perfmodel price
+    # (drift-mode keys only: that is the configuration the perfmodel
+    # fallback prices; other modes bill differently by design)
+    errors = {}
+    em = engine._energy_model_for()
+    full = engine._full_cfg(ARCH)
+    for key in tele.estimator.keys():
+        arch, op, steps, bucket, mode, taylorseer, rollback = key
+        if mode != "drift" or taylorseer:
+            continue
+        est = tele.estimator.estimate_s(arch, op, steps, bucket, mode=mode,
+                                        taylorseer=taylorseer,
+                                        rollback_interval=rollback)
+        rc = energy.RunConfig(num_steps=steps,
+                              nominal_steps=engine.nominal_steps,
+                              aggressive=OP_BY_NAME[op])
+        model = energy.run_cost(full, rc, batch=bucket, em=em)["latency_s"]
+        errors[f"{arch}/{op}/{steps}/b{bucket}"] = {
+            "learned_s": est, "perfmodel_s": model,
+            "rel_error": abs(est - model) / model,
+        }
+    rels = [e["rel_error"] for e in errors.values()]
+
+    bench = {
+        "requests": len(results),
+        "batches": engine.stats.batches,
+        "virtual_s": engine.clock_s,
+        "wall_s": wall_s,
+        "throughput_req_per_virtual_s": len(results) / engine.clock_s,
+        "throughput_req_per_wall_s": len(results) / max(wall_s, 1e-9),
+        "queue_wait_p50_s": pct(50),
+        "queue_wait_p99_s": pct(99),
+        "estimator": {
+            "observations": tele.estimator.total_observations,
+            "configs": len(tele.estimator),
+            "mean_rel_error_vs_perfmodel": sum(rels) / len(rels),
+            "max_rel_error_vs_perfmodel": max(rels),
+            "per_config": errors,
+        },
+        "guardband_floor": tele.controller.guard_index,
+        "deadline_misses": engine.stats.deadline_misses,
+    }
+    with open("BENCH_serving.json", "w", encoding="utf-8") as fh:
+        json.dump(bench, fh, indent=2, sort_keys=True)
+    print(json.dumps({k: v for k, v in bench.items() if k != "estimator"},
+                     indent=2, sort_keys=True))
+    print(f"estimator: mean rel err "
+          f"{bench['estimator']['mean_rel_error_vs_perfmodel']:.4f} over "
+          f"{bench['estimator']['configs']} configs")
+    print("wrote BENCH_serving.json")
+
+
+if __name__ == "__main__":
+    main()

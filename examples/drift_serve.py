@@ -35,12 +35,22 @@ mesh the latents are bit-identical either way:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/drift_serve.py --requests 8 \
         --batch 8 --sharded
+
+``--metrics-port PORT`` exposes the run's telemetry over HTTP
+(``/metrics`` Prometheus text, ``/healthz``, SSE ``/events``; 0 =
+ephemeral); ``--no-telemetry`` switches the subsystem -- metrics,
+learned latency estimates, adaptive BER guardband -- off entirely.
+Workloads naming explicit operating points serve bit-identically either
+way; ``auto`` requests lose the guardband floor. See docs/telemetry.md.
 """
 import argparse
+import contextlib
 
 from repro.core import dvfs as dvfs_lib
-from repro.serving import (DeadlineScheduler, DriftServeEngine, PreviewEvent,
-                           ShardedDriftServeEngine, make_engine)
+from repro.serving import (DeadlineScheduler, DriftServeEngine,
+                           EngineTelemetry, PreviewEvent,
+                           ShardedDriftServeEngine, make_engine,
+                           serve_telemetry)
 from repro.serving.request import REQUEST_PRIORITIES
 
 OP_LADDER_HELP = " -> ".join(p.name for p in dvfs_lib.OP_LADDER)
@@ -76,6 +86,13 @@ def build_parser():
     ap.add_argument("--sharded", action="store_true",
                     help="spread micro-batches across the device mesh")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metrics, /healthz, and SSE /events over "
+                         "HTTP for this run (0 = ephemeral port)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable metrics + learned latency estimates + "
+                         "the adaptive BER guardband (explicit-op serving "
+                         "is bit-identical; auto loses the floor)")
     return ap
 
 
@@ -87,51 +104,75 @@ def main():
     deadlines = [None if d.strip().lower() == "none" else float(d)
                  for d in args.deadline.split(",") if d.strip()] \
         if args.deadline is not None else [None]
+    if not ops or not priorities or not deadlines:
+        raise SystemExit("--op/--priority/--deadline need at least one "
+                         "non-empty entry")
+    telemetry = EngineTelemetry(enabled=not args.no_telemetry)
     if args.sharded:
         engine = make_engine(arch="dit-xl-512", smoke=True,
                              bucket=args.batch,
-                             model_parallel=args.model_parallel)
+                             model_parallel=args.model_parallel,
+                             telemetry=telemetry)
     else:
         if args.model_parallel != 1:
             raise SystemExit("--model-parallel requires --sharded")
         engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
-                                  bucket=args.batch)
+                                  bucket=args.batch, telemetry=telemetry)
+    server = None
+    if args.metrics_port is not None:
+        server = serve_telemetry(engine, port=args.metrics_port)
+        print(f"[drift_serve] telemetry at {server.url}")
+    try:
+        _drive(args, engine, server, ops, priorities, deadlines)
+    finally:
+        # never leak the bound port / server thread when the drain or
+        # one of the self-asserts below raises
+        if server is not None:
+            server.close()
 
+
+def _drive(args, engine, server, ops, priorities, deadlines):
     use_scheduler = (args.deadline is not None
                      or args.step_budget is not None
                      or any(p != "standard" for p in priorities))
     sched = DeadlineScheduler(engine) if use_scheduler else None
-    rejected = 0
-    for i in range(args.requests):
-        fields = dict(steps=args.steps, mode="drift", op=ops[i % len(ops)],
-                      seed=i)
-        if sched is not None:
-            adm = sched.submit(priority=priorities[i % len(priorities)],
-                               deadline_s=deadlines[i % len(deadlines)],
-                               step_budget=args.step_budget, **fields)
-            rejected += not adm.admitted
-            print(f"[admission] {adm.action}: op={adm.op} steps={adm.steps}"
-                  + (f" ({adm.reason})" if adm.reason else ""))
-        else:
-            engine.submit(**fields)
-
-    mesh = (dict(engine.mesh.shape)
-            if isinstance(engine, ShardedDriftServeEngine) else "1 device")
-    print(f"[drift_serve] {args.requests} requests, bucket={args.batch}, "
-          f"ops={ops}, mesh={mesh}")
-
     previews = 0
-    if args.stream:
-        results = []
-        for ev in engine.run_stream(args.stream):
-            if isinstance(ev, PreviewEvent):
-                previews += 1
+    # Hold the server's engine lock from first submission through the
+    # drain so a concurrent /events client 503s instead of interleaving
+    # batches -- or draining the queue we just filled.
+    drain_lock = server.engine_lock if server is not None \
+        else contextlib.nullcontext()
+    with drain_lock:
+        for i in range(args.requests):
+            fields = dict(steps=args.steps, mode="drift",
+                          op=ops[i % len(ops)], seed=i)
+            if sched is not None:
+                adm = sched.submit(priority=priorities[i % len(priorities)],
+                                   deadline_s=deadlines[i % len(deadlines)],
+                                   step_budget=args.step_budget, **fields)
+                print(f"[admission] {adm.action}: op={adm.op} "
+                      f"steps={adm.steps}"
+                      + (f" ({adm.reason})" if adm.reason else ""))
             else:
-                results.append(ev)
-        results.sort(key=lambda r: r.request_id)
-        print(f"[drift_serve] {previews} preview events streamed")
-    else:
-        results = engine.run()
+                engine.submit(**fields)
+
+        mesh = (dict(engine.mesh.shape)
+                if isinstance(engine, ShardedDriftServeEngine)
+                else "1 device")
+        print(f"[drift_serve] {args.requests} requests, "
+              f"bucket={args.batch}, ops={ops}, mesh={mesh}")
+
+        if args.stream:
+            results = []
+            for ev in engine.run_stream(args.stream):
+                if isinstance(ev, PreviewEvent):
+                    previews += 1
+                else:
+                    results.append(ev)
+            results.sort(key=lambda r: r.request_id)
+            print(f"[drift_serve] {previews} preview events streamed")
+        else:
+            results = engine.run()
 
     for r in results:
         miss = " MISSED-DEADLINE" if r.deadline_missed else ""
@@ -167,6 +208,11 @@ def main():
     if args.stream and any(r.steps > args.stream for r in results):
         assert previews >= 1, "streaming produced no previews"
     print("sampler cache verified: no recompiles after first batch per config")
+    if engine.telemetry.enabled and results:
+        est = engine.telemetry.estimator
+        print(f"telemetry: {est.total_observations} latency observations "
+              f"over {len(est)} configs; guardband floor "
+              f"{engine.telemetry.controller.guard_index}")
 
 
 if __name__ == "__main__":

@@ -245,6 +245,7 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
                   cfg: SamplerConfig,
                   monitor0: Optional[dvfs_lib.BerMonitorState] = None,
                   window: int = 1,
+                  on_window: Optional[Callable[[int], None]] = None,
                   _window_runner: Optional[Callable] = None):
     """Generator form of :func:`sample`: the same denoising scan chunked
     into windows of ``window`` steps, yielding a :class:`StreamEvent`
@@ -256,7 +257,10 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
     are bit-identical to ``sample``'s. Call with ``_window_runner`` from
     ``make_sampler(stream_window=...)`` to drive a pre-jitted window (the
     serving path); without it each window scans un-jitted (fine for tests
-    and small smoke runs).
+    and small smoke runs). ``on_window`` is a host-side tap fired with the
+    completed-step count after every window (including the last) -- the
+    serving telemetry counts stream windows with it; it never runs inside
+    a trace, so it cannot perturb the computation.
     """
     assert window >= 1, window
     sched, ts, t_prev, ber_table = _schedule_arrays(cfg)
@@ -275,6 +279,8 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
         xs_slice = tuple(x[start:start + window] for x in xs)
         carry = _window_runner(params, key, cond, text, carry, xs_slice)
         done = min(start + window, n)
+        if on_window is not None:
+            on_window(done)
         if done < n:
             yield StreamEvent(step=done, latents=carry[0])
     latents, _, _, mon, corrected, nevals = carry
@@ -284,7 +290,8 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
 def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
                  on_trace: Optional[Callable[[], None]] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 stream_window: int = 0):
+                 stream_window: int = 0,
+                 on_window: Optional[Callable[[int], None]] = None):
     """Build a reusable jitted sampling entry point for one configuration.
 
     Returns ``run(params, key, latents0, cond, text, monitor0)`` ->
@@ -314,7 +321,9 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
     (when ``k`` does not divide the step count) is a second, shorter trace
     -- so a streamed configuration costs at most two traces where the
     one-shot sampler costs one. The serving engine keys its compiled-sampler
-    cache on the window size (``SamplerKey.stream``).
+    cache on the window size (``SamplerKey.stream``). ``on_window`` (only
+    meaningful with ``stream_window``) fires host-side after each completed
+    window with the done-step count -- the serving telemetry's stream tap.
     """
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
@@ -356,7 +365,7 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
         def _run_stream(params, key, latents0, cond, text, monitor0):
             return sample_stream(model_cfg, params, key, latents0, cond,
                                  text, cfg, monitor0=monitor0,
-                                 window=stream_window,
+                                 window=stream_window, on_window=on_window,
                                  _window_runner=window_jit)
         return _run_stream
 

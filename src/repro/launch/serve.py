@@ -32,16 +32,27 @@ final latents are bit-identical to the unstreamed path.
 (data, model) mesh (``--model-parallel`` sets the model-axis width) via
 ``ShardedDriftServeEngine``; with one device it degrades to the plain
 engine. See docs/serving.md.
+
+``--metrics-port PORT`` serves the telemetry HTTP front-end for the run
+(``/metrics`` Prometheus text, ``/healthz``, SSE ``/events``; 0 binds an
+ephemeral port and prints it). ``--no-telemetry`` disables the whole
+telemetry subsystem -- metrics, learned latency estimates, adaptive BER
+guardband. Explicit-op workloads serve bit-identically without it;
+``op=auto`` loses the guardband floor (that adaptation is the point of
+the controller). See docs/telemetry.md.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import Optional, Sequence
 
 from repro.core import dvfs as dvfs_lib
-from repro.serving import (DeadlineScheduler, DriftServeEngine, PreviewEvent,
-                           ShardedDriftServeEngine, make_engine)
+from repro.serving import (DeadlineScheduler, DriftServeEngine,
+                           EngineTelemetry, PreviewEvent,
+                           ShardedDriftServeEngine, make_engine,
+                           serve_telemetry)
 from repro.serving.request import REQUEST_OPS, REQUEST_PRIORITIES
 
 # Derived from code so --help can never drift out of sync with the ladder
@@ -97,13 +108,24 @@ def build_parser() -> argparse.ArgumentParser:
                          "mesh (single device: plain engine)")
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="mesh model-axis width for --sharded")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the telemetry HTTP front-end (/metrics "
+                         "Prometheus text, /healthz, SSE /events) on this "
+                         "port for the duration of the run (0 = ephemeral, "
+                         "printed at startup; omit = no server)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the telemetry subsystem (metrics, learned "
+                         "latency estimates, adaptive BER guardband); "
+                         "explicit-op serving is bit-identical, op=auto "
+                         "loses the guardband floor")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
 
 def build_engine(args) -> DriftServeEngine:
     common = dict(arch=args.arch, smoke=args.smoke, bucket=args.batch,
-                  base_seed=args.seed)
+                  base_seed=args.seed,
+                  telemetry=EngineTelemetry(enabled=not args.no_telemetry))
     if args.sharded:
         return make_engine(model_parallel=args.model_parallel, **common)
     if args.model_parallel != 1:
@@ -121,6 +143,21 @@ def main(argv: Optional[Sequence[str]] = None,
     bucket = eng.batcher.bucket        # an injected engine's bucket wins
     n_requests = args.requests or bucket
 
+    server = None
+    if args.metrics_port is not None:
+        server = serve_telemetry(eng, port=args.metrics_port)
+        print(f"[serve] telemetry at {server.url} "
+              f"(/metrics /healthz /events)")
+    try:
+        return _drive(args, eng, server, n_requests, bucket)
+    finally:
+        # main() is also called in-process: never leak the bound port /
+        # server thread when the drain raises
+        if server is not None:
+            server.close()
+
+
+def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
     use_scheduler = (args.deadline is not None
                      or args.priority != "standard"
                      or args.step_budget is not None)
@@ -128,31 +165,38 @@ def main(argv: Optional[Sequence[str]] = None,
     fields = dict(arch=args.arch, smoke=args.smoke, steps=args.steps,
                   mode=args.mode, op=args.op, taylorseer=args.taylorseer,
                   rollback_interval=args.interval)
-    for i in range(n_requests):
-        if sched is not None:
-            adm = sched.submit(seed=args.seed + i, priority=args.priority,
-                               deadline_s=args.deadline,
-                               step_budget=args.step_budget, **fields)
-            print(f"[admission] req {adm.request_id}: {adm.action} "
-                  f"(op {adm.op}, {adm.steps} steps)"
-                  + (f" -- {adm.reason}" if adm.reason else ""))
-        else:
-            eng.submit(seed=args.seed + i, **fields)
-
-    t0 = time.time()
-    results = []
-    previews = 0
-    if args.stream:
-        for ev in eng.run_stream(args.stream):
-            if isinstance(ev, PreviewEvent):
-                previews += 1
-                print(f"  [preview] req {ev.request_id} step "
-                      f"{ev.step}/{ev.total_steps}")
+    # Hold the server's engine lock from first submission through the
+    # drain: a concurrent /events client gets a clean 503 instead of
+    # interleaving batches -- or stealing the just-submitted queue.
+    drain_lock = server.engine_lock if server is not None \
+        else contextlib.nullcontext()
+    with drain_lock:
+        for i in range(n_requests):
+            if sched is not None:
+                adm = sched.submit(seed=args.seed + i,
+                                   priority=args.priority,
+                                   deadline_s=args.deadline,
+                                   step_budget=args.step_budget, **fields)
+                print(f"[admission] req {adm.request_id}: {adm.action} "
+                      f"(op {adm.op}, {adm.steps} steps)"
+                      + (f" -- {adm.reason}" if adm.reason else ""))
             else:
-                results.append(ev)
-        results.sort(key=lambda r: r.request_id)
-    else:
-        results = eng.run()
+                eng.submit(seed=args.seed + i, **fields)
+
+        t0 = time.time()
+        results = []
+        previews = 0
+        if args.stream:
+            for ev in eng.run_stream(args.stream):
+                if isinstance(ev, PreviewEvent):
+                    previews += 1
+                    print(f"  [preview] req {ev.request_id} step "
+                          f"{ev.step}/{ev.total_steps}")
+                else:
+                    results.append(ev)
+            results.sort(key=lambda r: r.request_id)
+        else:
+            results = eng.run()
     wall = time.time() - t0
 
     print(f"[serve] {args.arch} mode={args.mode} op={args.op} "
@@ -184,6 +228,13 @@ def main(argv: Optional[Sequence[str]] = None,
               f"({s.rejected} rejected, {s.escalated_op} op-escalated, "
               f"{s.trimmed_steps} step-trimmed, {s.projected_misses} "
               f"projected misses)")
+    tele = eng.telemetry
+    if tele.enabled:
+        ctrl = tele.controller
+        print(f"  telemetry: {tele.estimator.total_observations} latency "
+              f"observations over {len(tele.estimator)} configs; guardband "
+              f"floor {ctrl.guard_index if ctrl else 0} "
+              f"({ctrl.guard_op_name() if ctrl else 'n/a'})")
     return results
 
 

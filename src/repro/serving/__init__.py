@@ -35,6 +35,20 @@ Each distinct (arch, steps, mode, operating point, bucket, stream, mesh)
 configuration compiles exactly once per process (``engine.cache.traces``
 counts actual JAX traces); the BER monitor persists across batches and
 feeds requests that pick their DVFS operating point with ``op="auto"``.
+
+Telemetry & online adaptation (``repro.serving.telemetry``,
+docs/telemetry.md) ride every engine by default: a Prometheus-style
+metrics registry, a served-batch latency history the scheduler's
+admission control learns from (perfmodel fallback on empty history), an
+adaptive BER guardband floor under the "auto" ladder, and an HTTP/SSE
+front-end::
+
+    from repro.serving import serve_telemetry
+
+    server = serve_telemetry(engine, port=0)     # /metrics /healthz /events
+    print(server.url)
+    ...
+    server.close()
 """
 from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
@@ -46,6 +60,10 @@ from repro.serving.scheduler import (Admission, DeadlineScheduler,
                                      PriorityMicroBatcher, SchedulerConfig,
                                      SchedulerStats)
 from repro.serving.sharded import ShardedDriftServeEngine, make_engine
+from repro.serving.telemetry import (EngineTelemetry, GuardbandConfig,
+                                     GuardbandController, LatencyEstimator,
+                                     MetricsRegistry, TelemetryHTTPServer,
+                                     serve_telemetry)
 
 __all__ = [
     "DriftServeEngine", "ShardedDriftServeEngine", "make_engine",
@@ -56,4 +74,7 @@ __all__ = [
     "CompiledSamplerCache", "SamplerKey",
     "DeadlineScheduler", "PriorityMicroBatcher", "SchedulerConfig",
     "SchedulerStats", "Admission",
+    "EngineTelemetry", "MetricsRegistry", "LatencyEstimator",
+    "GuardbandController", "GuardbandConfig", "TelemetryHTTPServer",
+    "serve_telemetry",
 ]

@@ -46,6 +46,17 @@ priority batch formation live one layer up in
 ``serving/scheduler.DeadlineScheduler`` (see docs/scheduler.md); the bare
 engine only records deadline misses.
 
+Telemetry (``serving/telemetry``, docs/telemetry.md) is on by default and
+entirely host-side: every served batch feeds a metrics registry (exposed
+over HTTP as Prometheus text), a served-batch latency history the
+scheduler consults for learned admission estimates, and -- for monitored
+modes -- an adaptive guardband controller that floors the ``op="auto"``
+ladder when detection counts spike (``auto_op_index`` is the single
+resolution point). ``telemetry=EngineTelemetry(enabled=False)`` turns all
+of it off; explicit-op workloads then serve bit-identically, while
+``op="auto"`` may resolve to a more aggressive point (no guardband floor)
+-- changing that resolution is exactly what the controller is for.
+
 The engine is single-threaded by design: batches run sequentially so the
 BER-monitor feedback is well-ordered. ``serving/sharded.py`` extends this
 exact loop across a device mesh (one micro-batch spread over the ``data``
@@ -76,6 +87,7 @@ from repro.serving.batcher import MicroBatch, MicroBatcher
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
 from repro.serving.request import (GenerationRequest, PreviewEvent,
                                    RequestQueue, RequestResult)
+from repro.serving.telemetry import EngineTelemetry
 from repro.train import steps as steps_lib
 
 # Named operating points a request (or the auto ladder) can resolve to.
@@ -121,7 +133,8 @@ class DriftServeEngine:
                  monitor_target_ber: float = 3e-3,
                  clean_cache_size: int = 8,
                  sampler_factory: Optional[Callable] = None,
-                 energy_model: Optional[energy.EnergyModel] = None):
+                 energy_model: Optional[energy.EnergyModel] = None,
+                 telemetry: Optional[EngineTelemetry] = None):
         self.default_arch = arch
         self.default_smoke = smoke
         self.nominal_steps = nominal_steps
@@ -131,6 +144,14 @@ class DriftServeEngine:
                                     key_extra=self._sampler_key_extra(bucket))
         self.cache = CompiledSamplerCache()
         self.stats = EngineStats()
+        # Telemetry bundle (metrics registry, latency-history estimator,
+        # guardband controller): default ON -- every tap is a host-side
+        # Python call per batch, nothing traced. Pass
+        # EngineTelemetry(enabled=False) (the CLIs' --no-telemetry) for a
+        # telemetry-free engine (bit-identical for explicit ops; "auto"
+        # loses the guardband floor).
+        self.telemetry = (telemetry if telemetry is not None
+                          else EngineTelemetry()).bind(monitor_target_ber)
         self.monitor = dvfs_lib.ber_monitor_init()
         # Virtual clock in modeled-accelerator seconds: advanced by each
         # batch's perfmodel latency. Deadlines/aging are measured on it.
@@ -147,7 +168,9 @@ class DriftServeEngine:
         self._sampler_factory = sampler_factory or (
             lambda key, model_cfg, scfg, on_trace:
             sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
-                                     stream_window=key.stream))
+                                     stream_window=key.stream,
+                                     on_window=self.telemetry
+                                     .on_stream_window))
         self._energy_model = energy_model
         self._full_cfgs: Dict[str, object] = {}
 
@@ -169,7 +192,10 @@ class DriftServeEngine:
         fields.setdefault("smoke", self.default_smoke)
         budget = fields.get("step_budget")
         if budget is not None:
-            fields["steps"] = min(fields.get("steps", 10), budget)
+            default_steps = GenerationRequest.__dataclass_fields__[
+                "steps"].default
+            fields["steps"] = min(fields.get("steps", default_steps),
+                                  budget)
         fields.setdefault("submitted_at_s", self.clock_s)
         family = configs.get_config(fields["arch"]).family
         if family not in ("dit", "unet"):
@@ -177,7 +203,9 @@ class DriftServeEngine:
                 f"arch {fields['arch']!r} is a {family} model; the serving "
                 "engine drives the diffusion archs (use launch/train.py "
                 "for LMs)")
-        return self.queue.submit(**fields)
+        rid = self.queue.submit(**fields)
+        self.telemetry.on_submit()
+        return rid
 
     # ------------------------------------------------------------ serving
     def run(self) -> List[RequestResult]:
@@ -210,8 +238,19 @@ class DriftServeEngine:
 
     def _resolve_op(self, req: GenerationRequest) -> str:
         if req.op == "auto":
-            return dvfs_lib.ladder_op(self.monitor.op_index).name
+            return self.auto_op_name()
         return req.op
+
+    def auto_op_index(self) -> int:
+        """Ladder index an ``op="auto"`` request resolves to right now: the
+        BER monitor's index, floored by the telemetry guardband controller
+        (identity when telemetry is disabled). The single source of truth
+        for "auto" -- batch formation and scheduler cost estimation both
+        route here, so admission prices the point that will actually run."""
+        return self.telemetry.clamp_ladder_index(int(self.monitor.op_index))
+
+    def auto_op_name(self) -> str:
+        return dvfs_lib.ladder_op(self.auto_op_index()).name
 
     def _sampler_key_extra(self, bucket: int) -> Dict[str, object]:
         """SamplerKey fields stamped by the engine rather than the request
@@ -349,6 +388,7 @@ class DriftServeEngine:
             preview = jnp.clip(ev.latents, -1, 1)
             for slot, req in enumerate(mb.requests):   # live slots only
                 self.stats.preview_events += 1
+                self.telemetry.on_preview()
                 yield PreviewEvent(request_id=req.request_id,
                                    batch_index=ctx.batch_index,
                                    step=int(ev.step),
@@ -442,4 +482,14 @@ class DriftServeEngine:
                     0.0),
                 deadline_missed=missed,
             ))
+        # telemetry tap: metrics + latency history for the scheduler's
+        # learned estimates, and (monitored modes) one guardband-controller
+        # observation of the batch's realized BER / rollback intensity
+        self.telemetry.on_batch(
+            key=key, n_live=n_live, n_pad=mb.n_pad,
+            latency_s=cost["latency_s"], ema_ber=mon_ber, op_index=mon_idx,
+            corrected=corrected,
+            n_words=int(latents.size) * max(key.steps, 1),
+            monitored=protected, clock_s=self.clock_s,
+            queue_depth=len(self.queue), results=results)
         return results

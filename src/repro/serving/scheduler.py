@@ -12,12 +12,17 @@ The engine gives every request two orthogonal quality/cost levers:
 admission-control projection of the queue:
 
 1.  **Projection.** A request's completion time is estimated on the
-    engine's virtual clock as ``clock + backlog + own batch latency``,
-    where every term comes from the same perfmodel the engine bills with
-    (``perfmodel.energy.run_cost``), so projections and the clock that
-    later judges them are mutually consistent. The backlog counts only
-    pending requests that will be served *before* the newcomer under
-    priority order.
+    engine's virtual clock as ``clock + backlog + own batch latency``.
+    Batch latencies come from the engine telemetry's **learned
+    estimator** (EWMA + conservative percentile over served-batch
+    history, per (arch, op, steps, bucket) plus mode/taylorseer/
+    rollback-interval discriminators -- ``serving/telemetry``)
+    when that configuration has history, and otherwise fall back to the
+    same perfmodel the engine bills with
+    (``perfmodel.energy.run_cost``) -- with no history the two paths
+    are bit-identical, so a fresh scheduler behaves exactly like the
+    pre-telemetry one. The backlog counts only pending requests that
+    will be served *before* the newcomer under priority order.
 2.  **Policy.** Given the time left after the backlog, pick (op, steps):
     keep the request as submitted if it fits; otherwise escalate the
     operating point to ``overclock`` (speed mode); otherwise trim steps at
@@ -69,6 +74,10 @@ class SchedulerConfig:
     # top priority by the batcher regardless of its class -- the
     # starvation guard. None disables aging.
     age_s: Optional[float] = 1.0
+    # Consult the engine telemetry's learned latency estimator before the
+    # perfmodel (False pins admission to the perfmodel clock even with
+    # telemetry on; with empty history the two are bit-identical anyway).
+    use_learned_latency: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,9 +168,17 @@ class DeadlineScheduler:
         engine.batcher = PriorityMicroBatcher(
             engine.batcher.bucket, key_extra=engine.batcher.key_extra,
             urgency=self._urgency)
-        # (arch, op name, steps) -> modeled bucket latency, memoized --
-        # run_cost is pure arithmetic but admission sits on the submit path.
-        self._latency_cache: Dict[Tuple[str, str, int], float] = {}
+        # Modeled-latency memo (run_cost is pure arithmetic but admission
+        # sits on the submit path). Keyed on the *operating-point
+        # parameters* -- (arch, voltage, frequency, steps, bucket,
+        # nominal_steps) -- never on a request-facing name: "auto"
+        # resolves through the monitor ladder and the guardband floor, so
+        # a name-keyed memo would keep serving the latency of whatever
+        # point "auto" meant at first call after the ladder adapts.
+        # Learned estimates are never memoized here (history moves every
+        # batch; the estimator lookup is O(1) anyway).
+        self._latency_cache: Dict[
+            Tuple[str, float, float, int, int, int], float] = {}
 
     # ------------------------------------------------------------- intake
     def submit(self, **fields) -> Admission:
@@ -179,6 +196,7 @@ class DeadlineScheduler:
         # Probe request: normalizes defaults + runs field validation once.
         probe = GenerationRequest(request_id=-1, **fields)
         adm = self.plan(probe)
+        eng.telemetry.on_admission(adm.action)
         if not adm.admitted:
             self.stats.rejected += 1
             return adm
@@ -208,24 +226,25 @@ class DeadlineScheduler:
                              action="as-requested")
         wait = self.projected_wait_s(req)
         budget = req.deadline_s - wait     # time left for the own batch
+        disc = self._discriminators(req)
         candidates = [(req.op, cap, "as-requested")]
         if self._concrete_op(req.op) != "overclock":
             candidates.append(("overclock", cap, "escalated-op"))
         for op_name, steps, action in candidates:
-            lat = self.batch_latency_s(req.arch, op_name, steps)
+            lat = self.batch_latency_s(req.arch, op_name, steps, **disc)
             if lat <= budget:
                 return Admission(admitted=True, op=op_name, steps=steps,
                                  action=action, projected_wait_s=wait,
                                  projected_total_s=wait + lat)
         floor = min(cap, self.cfg.min_steps)
         for steps in range(cap - 1, floor - 1, -1):
-            lat = self.batch_latency_s(req.arch, "overclock", steps)
+            lat = self.batch_latency_s(req.arch, "overclock", steps, **disc)
             if lat <= budget:
                 return Admission(admitted=True, op="overclock", steps=steps,
                                  action="trimmed-steps",
                                  projected_wait_s=wait,
                                  projected_total_s=wait + lat)
-        lat = self.batch_latency_s(req.arch, "overclock", floor)
+        lat = self.batch_latency_s(req.arch, "overclock", floor, **disc)
         if self.cfg.reject_hopeless:
             return Admission(
                 admitted=False, op=req.op, steps=cap, action="rejected",
@@ -252,45 +271,79 @@ class DeadlineScheduler:
         are conservative or second-order for admission purposes.
         """
         mine = self._urgency(req, _tiebreak=math.inf)
-        ahead: Dict[Tuple[str, str, int], int] = {}
+        ahead: Dict[Tuple, int] = {}
         for r in self.engine.queue.pending():
             if self._urgency(r) < mine:
-                k = (r.arch, self._concrete_op(r.op), r.steps)
+                k = (r.arch, self._concrete_op(r.op), r.steps,
+                     tuple(sorted(self._discriminators(r).items())))
                 ahead[k] = ahead.get(k, 0) + 1
         bucket = self.engine.batcher.bucket
         wait = 0.0
-        for (arch, op_name, steps), n in ahead.items():
+        for (arch, op_name, steps, disc), n in ahead.items():
             n_batches = -(-n // bucket)            # ceil
-            wait += n_batches * self.batch_latency_s(arch, op_name, steps)
+            wait += n_batches * self.batch_latency_s(arch, op_name, steps,
+                                                     **dict(disc))
         return wait
 
-    def batch_latency_s(self, arch: str, op_name: str, steps: int) -> float:
-        """Modeled latency of one full bucket of this configuration -- the
-        same ``energy.run_cost`` call (full-size arch, batch = bucket) the
-        engine bills results with and advances its clock by."""
-        key = (arch, op_name, steps)
+    @staticmethod
+    def _discriminators(req: GenerationRequest) -> Dict[str, object]:
+        """Learned-estimator key discriminators beyond (arch, op, steps,
+        bucket): fields that change a batch's billed latency without
+        changing its perfmodel admission price (the fallback deliberately
+        ignores them to stay bit-identical to the pre-telemetry path)."""
+        return {"mode": req.mode, "taylorseer": req.taylorseer,
+                "rollback_interval": req.rollback_interval}
+
+    def batch_latency_s(self, arch: str, op_name: str, steps: int,
+                        **disc) -> float:
+        """Estimated latency of one full bucket of this configuration.
+
+        Learned first: if the engine telemetry's estimator has
+        served-batch history for (arch, resolved op, steps, bucket) --
+        plus the ``disc`` discriminators (mode, taylorseer,
+        rollback_interval; defaulting to the standard drift
+        configuration) -- its estimate wins: measured, not modeled,
+        cost. Otherwise the perfmodel fallback is the same
+        ``energy.run_cost`` call (full-size arch, batch = bucket) the
+        engine bills results with and advances its clock by, memoized on
+        operating-point *parameters* so ladder/guardband adaptation of
+        "auto" can never be served a stale projection."""
+        eng = self.engine
+        concrete = self._concrete_op(op_name)
+        bucket = eng.batcher.bucket
+        tele = getattr(eng, "telemetry", None)
+        if self.cfg.use_learned_latency and tele is not None:
+            learned = tele.learned_latency_s(arch, concrete, steps, bucket,
+                                             **disc)
+            if learned is not None:
+                tele.on_projection("learned")
+                return learned
+            tele.on_projection("perfmodel")
+        op = OP_BY_NAME.get(concrete, dvfs_lib.NOMINAL)
+        key = (arch, op.voltage, op.freq_ghz, steps, bucket,
+               eng.nominal_steps)
         cached = self._latency_cache.get(key)
         if cached is not None:
             return cached
-        eng = self.engine
-        op = OP_BY_NAME.get(self._concrete_op(op_name), dvfs_lib.NOMINAL)
         rc = energy.RunConfig(num_steps=steps,
                               nominal_steps=eng.nominal_steps,
                               aggressive=op)
-        cost = energy.run_cost(eng._full_cfg(arch), rc,
-                               batch=eng.batcher.bucket,
+        cost = energy.run_cost(eng._full_cfg(arch), rc, batch=bucket,
                                em=eng._energy_model_for())
         self._latency_cache[key] = cost["latency_s"]
         return cost["latency_s"]
 
     # ---------------------------------------------------------- formation
     def _concrete_op(self, op_name: str) -> str:
-        """Resolve "auto" to the monitor's current ladder point for cost
-        estimation (the batcher re-resolves at formation time; the ladder
-        rarely moves between admission and formation, and all ladder points
-        share nominal frequency, so the latency estimate is exact anyway)."""
+        """Resolve "auto" to the point it would run at right now --
+        ``engine.auto_op_name()``, i.e. the monitor's ladder index floored
+        by the telemetry guardband -- for cost estimation (the batcher
+        re-resolves through the same method at formation time; the ladder
+        rarely moves between admission and formation, and all ladder
+        points share nominal frequency, so the latency estimate is exact
+        anyway)."""
         if op_name == "auto":
-            return dvfs_lib.ladder_op(int(self.engine.monitor.op_index)).name
+            return self.engine.auto_op_name()
         return op_name
 
     def _urgency(self, req: GenerationRequest,

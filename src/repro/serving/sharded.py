@@ -98,7 +98,9 @@ class ShardedDriftServeEngine(DriftServeEngine):
                                  on_trace):
         return sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
                                         mesh=self.mesh,
-                                        stream_window=key.stream)
+                                        stream_window=key.stream,
+                                        on_window=self.telemetry
+                                        .on_stream_window)
 
     def _params_for(self, arch: str, smoke: bool):
         k = (arch, smoke)

@@ -1,0 +1,263 @@
+"""Telemetry & online adaptation for the DRIFT serving stack.
+
+The serving engine runs the DRIFT loop -- detect errors cheaply, adapt
+the operating point, correct only what matters -- but before this
+subsystem it ran *open loop* at the serving layer: worst-case perfmodel
+latencies for admission, a DVFS ladder that never learned from the
+detection counts it collects, previews that died at a Python generator.
+This package is the observe -> learn -> adapt layer:
+
+===================  =====================================================
+module               role
+===================  =====================================================
+``metrics``          counters / gauges / histograms + Prometheus text
+                     exposition (the ``/metrics`` payload)
+``history``          served-batch history + learned per-(arch, op, steps,
+                     bucket) latency estimator the scheduler consults,
+                     with perfmodel fallback on empty history
+``controller``       adaptive BER guardband: widens/tightens the floor
+                     under the auto-op ladder from the monitor's
+                     psum-reduced detection statistics, with hysteresis
+``http``             stdlib HTTP front-end: ``/metrics``, ``/healthz``,
+                     and an SSE ``/events`` endpoint relaying
+                     ``PreviewEvent`` streams
+===================  =====================================================
+
+``EngineTelemetry`` (below) bundles the three host-side parts into the
+single object the engine owns (``engine.telemetry``); every tap is a
+plain Python call on the batch boundary -- nothing is traced, so
+telemetry never changes what a given configuration *computes*. It can
+change which configuration runs, on purpose: the guardband floors
+``op="auto"`` resolution, and learned estimates steer admission once
+history exists. With ``enabled=False`` (or for workloads that name
+explicit operating points, before any history/guardband effect) serving
+is bit-identical to the telemetry-free engine.
+
+Metric catalog, controller state machine, and the SSE wire format:
+docs/telemetry.md.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.serving.telemetry.controller import (GuardbandConfig,
+                                                GuardbandController,
+                                                GuardbandStats)
+from repro.serving.telemetry.history import (BatchObservation,
+                                             LatencyEstimator, LatencyKey)
+from repro.serving.telemetry.metrics import (Counter, Gauge, Histogram,
+                                             MetricsRegistry)
+
+__all__ = [
+    "EngineTelemetry",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "LatencyEstimator", "BatchObservation", "LatencyKey",
+    "GuardbandController", "GuardbandConfig", "GuardbandStats",
+    "TelemetryHTTPServer", "serve_telemetry",
+]
+
+
+class EngineTelemetry:
+    """The engine's telemetry bundle: registry + estimator + controller.
+
+    Construction is cheap and side-effect-free; the engine calls
+    :meth:`bind` once with its monitor target BER, which instantiates the
+    guardband controller (unless ``guardband=False``) and registers the
+    metric families. ``enabled=False`` turns every hook into a no-op and
+    keeps the estimator/controller absent, so the scheduler's perfmodel
+    fallback and the engine's ladder resolution behave exactly as without
+    telemetry (``--no-telemetry`` on the CLIs builds this).
+    """
+
+    def __init__(self, enabled: bool = True,
+                 registry: Optional[MetricsRegistry] = None,
+                 estimator: Optional[LatencyEstimator] = None,
+                 controller: Optional[GuardbandController] = None,
+                 guardband: bool = True,
+                 guardband_config: Optional[GuardbandConfig] = None) -> None:
+        self.enabled = enabled
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        self.estimator = (estimator if estimator is not None else
+                          LatencyEstimator()) if enabled else None
+        self.controller = controller
+        self._want_guardband = guardband and enabled
+        self._guardband_config = guardband_config
+        self._bound = False
+
+    @classmethod
+    def disabled(cls) -> "EngineTelemetry":
+        return cls(enabled=False)
+
+    # ------------------------------------------------------------ binding
+    def bind(self, target_ber: float) -> "EngineTelemetry":
+        """Engine attach point: build the controller against the engine's
+        monitor target and register the metric families. Idempotent."""
+        if self._bound or not self.enabled:
+            self._bound = True
+            return self
+        self._bound = True
+        if self._want_guardband and self.controller is None:
+            self.controller = GuardbandController(
+                target_ber, self._guardband_config)
+        r = self.registry
+        self._m_submitted = r.counter(
+            "drift_requests_submitted_total",
+            "Requests accepted into the engine queue")
+        self._m_served = r.counter(
+            "drift_requests_served_total",
+            "Requests completed with a RequestResult")
+        self._m_batches = r.counter(
+            "drift_batches_total", "Micro-batches served",
+            label_names=("mode", "op"))
+        self._m_padded = r.counter(
+            "drift_padded_slots_total", "Bucket slots filled with padding")
+        self._m_previews = r.counter(
+            "drift_preview_events_total", "Streamed latent previews yielded")
+        self._m_windows = r.counter(
+            "drift_stream_windows_total",
+            "Jitted streaming windows executed by the sampler")
+        self._m_misses = r.counter(
+            "drift_deadline_misses_total",
+            "Requests completed past their virtual-clock deadline")
+        self._m_corrected = r.counter(
+            "drift_rollback_corrected_elems_total",
+            "Rollback-corrected tensor elements (whole batches)")
+        self._m_batch_lat = r.histogram(
+            "drift_batch_latency_seconds",
+            "Modeled (virtual-clock) latency per served micro-batch",
+            label_names=("op",))
+        self._m_queue_wait = r.histogram(
+            "drift_queue_wait_seconds",
+            "Virtual-clock wait between submission and batch start")
+        self._m_clock = r.gauge(
+            "drift_clock_seconds", "Engine virtual clock")
+        self._m_depth = r.gauge(
+            "drift_queue_depth", "Pending requests after the last batch")
+        self._m_ema = r.gauge(
+            "drift_monitor_ema_ber", "BER monitor EMA after the last batch")
+        self._m_ladder = r.gauge(
+            "drift_monitor_ladder_index",
+            "BER monitor ladder index after the last batch")
+        self._m_guard = r.gauge(
+            "drift_guardband_index", "Guardband controller ladder floor")
+        self._m_widen = r.counter(
+            "drift_guardband_widenings_total", "Guardband widen transitions")
+        self._m_tighten = r.counter(
+            "drift_guardband_tightenings_total",
+            "Guardband re-tighten transitions")
+        self._m_realized = r.gauge(
+            "drift_realized_ber",
+            "EWMA of the monitor's BER estimate per operating point",
+            label_names=("op",))
+        self._m_obs = r.counter(
+            "drift_estimator_observations_total",
+            "Served-batch latency observations folded into the estimator")
+        self._m_est_keys = r.gauge(
+            "drift_estimator_keys",
+            "Distinct (arch, op, steps, bucket) latency models")
+        self._m_admissions = r.counter(
+            "drift_admissions_total", "Scheduler admission decisions",
+            label_names=("action",))
+        self._m_projection = r.counter(
+            "drift_projection_source_total",
+            "Latency source used for admission projections",
+            label_names=("source",))
+        return self
+
+    # -------------------------------------------------------------- hooks
+    # Every hook no-ops when disabled; the engine calls them
+    # unconditionally so the serving loop stays branch-free.
+    def on_submit(self) -> None:
+        if self.enabled:
+            self._m_submitted.inc()
+
+    def on_batch(self, key, n_live: int, n_pad: int, latency_s: float,
+                 ema_ber: float, op_index: int, corrected: int,
+                 n_words: int, monitored: bool, clock_s: float,
+                 queue_depth: int, results) -> None:
+        """One served micro-batch: metrics, history, and -- for monitored
+        modes -- one guardband-controller observation."""
+        if not self.enabled:
+            return
+        op_name = key.op or "nominal"
+        self._m_batches.labels(mode=key.mode, op=op_name).inc()
+        self._m_padded.inc(n_pad)
+        self._m_served.inc(n_live)
+        self._m_batch_lat.labels(op=op_name).observe(latency_s)
+        self._m_clock.set(clock_s)
+        self._m_depth.set(queue_depth)
+        self._m_ema.set(ema_ber)
+        self._m_ladder.set(op_index)
+        self._m_corrected.inc(corrected)
+        for res in results:
+            self._m_queue_wait.observe(res.queue_wait_s)
+            if res.deadline_missed:
+                self._m_misses.inc()
+        self.estimator.observe(BatchObservation(
+            arch=key.arch, op=op_name, steps=key.steps, bucket=key.bucket,
+            latency_s=latency_s, clock_s=clock_s,
+            batch_index=results[0].batch_index if results else -1,
+            mode=key.mode, taylorseer=key.taylorseer,
+            rollback_interval=key.rollback_interval))
+        self._m_obs.inc()
+        self._m_est_keys.set(len(self.estimator))
+        if monitored and self.controller is not None:
+            self.controller.observe_batch(ema_ber, op_name,
+                                          corrected_elems=corrected,
+                                          n_words=n_words)
+            self._m_guard.set(self.controller.guard_index)
+            st = self.controller.stats
+            self._sync_counter(self._m_widen, st.widenings)
+            self._sync_counter(self._m_tighten, st.tightenings)
+            self._m_realized.labels(op=op_name).set(
+                self.controller.realized_ber[op_name])
+
+    @staticmethod
+    def _sync_counter(counter: Counter, target: float) -> None:
+        delta = target - counter.value
+        if delta > 0:
+            counter.inc(delta)
+
+    def on_preview(self) -> None:
+        if self.enabled:
+            self._m_previews.inc()
+
+    def on_stream_window(self, done_steps: int) -> None:
+        """Sampler tap: fires once per completed jitted streaming window
+        (threaded through ``sampler.make_sampler(on_window=...)``)."""
+        if self.enabled:
+            self._m_windows.inc()
+
+    def on_admission(self, action: str) -> None:
+        if self.enabled:
+            self._m_admissions.labels(action=action).inc()
+
+    def on_projection(self, source: str) -> None:
+        """source: "learned" | "perfmodel" -- which clock priced a
+        scheduler projection."""
+        if self.enabled:
+            self._m_projection.labels(source=source).inc()
+
+    # ------------------------------------------------------------ queries
+    def clamp_ladder_index(self, op_index: int) -> int:
+        """Apply the guardband floor (identity when disabled/absent)."""
+        if self.enabled and self.controller is not None:
+            return self.controller.clamp(op_index)
+        return int(op_index)
+
+    def learned_latency_s(self, arch: str, op: str, steps: int,
+                          bucket: int, **disc) -> Optional[float]:
+        """Learned batch latency, or None (disabled / empty history).
+        ``disc`` are the extra ``LatencyKey`` discriminators (mode,
+        taylorseer, rollback_interval), defaulting to the standard drift
+        configuration."""
+        if not self.enabled or self.estimator is None:
+            return None
+        return self.estimator.estimate_s(arch, op, steps, bucket, **disc)
+
+
+# Re-exported late: http imports request types, keep the cheap modules above
+# importable without dragging the server in first.
+from repro.serving.telemetry.http import (TelemetryHTTPServer,  # noqa: E402
+                                          serve_telemetry)

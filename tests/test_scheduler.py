@@ -408,5 +408,5 @@ def test_serve_cli_help_enumerates_ladder_and_flags():
     for p in dvfs.OP_LADDER:
         assert p.name in text, f"--help lost ladder point {p.name}"
     for flag in ("--priority", "--deadline", "--step-budget", "--stream",
-                 "--op"):
+                 "--op", "--metrics-port", "--no-telemetry"):
         assert flag in text, f"--help lost {flag}"

@@ -178,3 +178,30 @@ def test_make_engine_picks_sharded_on_multi_device():
     eng = make_engine(bucket=2)
     assert isinstance(eng, ShardedDriftServeEngine)
     assert eng.mesh.size == jax.device_count()
+
+
+@needs_mesh
+def test_empty_history_admission_bit_identical_on_mesh():
+    """Telemetry-estimator fallback twin (single-device version in
+    test_telemetry.py): on the 8-fake-device sharded engine with no
+    served-batch history, admission decisions and clock projections are
+    bit-identical to the perfmodel-only (telemetry-disabled) path."""
+    from repro.serving import DeadlineScheduler, EngineTelemetry
+
+    def plans(telemetry):
+        eng = ShardedDriftServeEngine(bucket=BUCKET, telemetry=telemetry)
+        sched = DeadlineScheduler(eng)
+        lat = sched.batch_latency_s("dit-xl-512", "undervolt", STEPS)
+        out = []
+        for i, (dl, prio) in enumerate([(None, "background"),
+                                        (5.0 * lat, "interactive"),
+                                        (1.2 * lat, "standard"),
+                                        (1e-7, "interactive")]):
+            out.append(sched.submit(steps=STEPS, mode="drift",
+                                    op="undervolt", priority=prio,
+                                    deadline_s=dl, seed=i))
+        return out
+
+    with_telemetry = plans(None)                       # default: enabled
+    without = plans(EngineTelemetry(enabled=False))
+    assert with_telemetry == without   # frozen dataclasses, exact floats

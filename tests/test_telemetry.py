@@ -1,0 +1,548 @@
+"""Telemetry subsystem tests: metrics registry/exposition, learned latency
+estimates with perfmodel fallback, the adaptive BER guardband, and the
+HTTP/SSE front-end.
+
+Covers the PR 4 acceptance bar:
+
+* with telemetry enabled and history populated, scheduler admission uses
+  the learned estimates -- an observed-latency divergence from the
+  perfmodel demonstrably flips the admission decision; with no history,
+  decisions and projections are bit-identical to the perfmodel-only path
+  (the 8-fake-device twin lives in test_serving_sharded.py);
+* an injected detection-count spike lowers the auto ladder's
+  aggressiveness within one adaptation window, then recovers after quiet
+  windows, while the compiled-sampler cache stays within its trace
+  budget;
+* the SSE endpoint delivers the same PreviewEvent sequence as the
+  in-process generator, and final latents stay bit-identical to the
+  non-streaming path (digest-compared here with the fake sampler; the
+  real-model twin is marked slow).
+
+Scheduler/controller logic rides the fake sampler factory (no jit, no
+model); the HTTP tests run a real ThreadingHTTPServer on an ephemeral
+port with stdlib urllib as the client.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dvfs
+from repro.diffusion.sampler import SampleOutput, StreamEvent
+from repro.serving import (DeadlineScheduler, DriftServeEngine,
+                           EngineTelemetry, GuardbandConfig,
+                           GuardbandController, PreviewEvent, RequestResult,
+                           SchedulerConfig, serve_telemetry)
+from repro.serving.telemetry import (BatchObservation, LatencyEstimator,
+                                     MetricsRegistry)
+from repro.serving.telemetry.http import (latents_sha256, preview_wire,
+                                          result_wire)
+
+ARCH = "dit-xl-512"
+
+
+def make_fake_factory(box=None):
+    """Echo-latents sampler stub whose monitor EMA/corrected counts come
+    from the mutable ``box`` -- the detection-spike injection point."""
+    box = box if box is not None else {}
+
+    def factory(key, model_cfg, scfg, on_trace):
+        on_trace()
+
+        def output(latents, monitor0):
+            ema = box.get("ema", float(monitor0.ema_ber))
+            mon = dvfs.BerMonitorState(jnp.float32(ema), monitor0.op_index,
+                                       monitor0.n_updates + 1)
+            return SampleOutput(latents, mon,
+                                jnp.int32(box.get("corrected", 0)),
+                                jnp.int32(scfg.num_sample_steps))
+
+        if not key.stream:
+            return lambda params, rng, latents, cond, text, monitor0: \
+                output(latents, monitor0)
+
+        def run_stream(params, rng, latents, cond, text, monitor0):
+            for done in range(key.stream, scfg.num_sample_steps, key.stream):
+                yield StreamEvent(step=done, latents=latents)
+            yield output(latents, monitor0)
+        return run_stream
+    return factory
+
+
+def make_engine(bucket=1, box=None, **kw):
+    return DriftServeEngine(arch=ARCH, smoke=True, bucket=bucket,
+                            sampler_factory=make_fake_factory(box), **kw)
+
+
+# ------------------------------------------------------- metrics registry
+def test_counter_gauge_histogram_exposition():
+    reg = MetricsRegistry()
+    c = reg.counter("t_requests_total", "requests", label_names=("op",))
+    c.labels(op="undervolt").inc()
+    c.labels(op="undervolt").inc(2)
+    c.labels(op="overclock").inc()
+    g = reg.gauge("t_clock_seconds", "clock")
+    g.set(1.5)
+    h = reg.histogram("t_latency_seconds", "latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    text = reg.expose()
+    assert "# TYPE t_requests_total counter" in text
+    assert 't_requests_total{op="undervolt"} 3' in text
+    assert 't_requests_total{op="overclock"} 1' in text
+    assert "# TYPE t_clock_seconds gauge" in text
+    assert "t_clock_seconds 1.5" in text
+    # cumulative buckets + sum/count
+    assert 't_latency_seconds_bucket{le="0.1"} 1' in text
+    assert 't_latency_seconds_bucket{le="1"} 2' in text
+    assert 't_latency_seconds_bucket{le="+Inf"} 3' in text
+    assert "t_latency_seconds_count 3" in text
+    assert text.endswith("\n")
+    # idempotent re-registration returns the same metric
+    assert reg.counter("t_requests_total") is c
+    with pytest.raises(AssertionError):
+        reg.gauge("t_requests_total")
+
+
+def test_histogram_percentile_and_label_validation():
+    reg = MetricsRegistry()
+    h = reg.histogram("t_wait_seconds", "wait")
+    assert h.percentile(50) is None
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.percentile(50) == pytest.approx(50.0, abs=1.0)
+    assert h.percentile(99) == pytest.approx(99.0, abs=1.0)
+    c = reg.counter("t_labeled_total", "x", label_names=("a",))
+    with pytest.raises(ValueError):
+        c.labels(b="nope")
+
+
+def test_estimator_window_eviction_keeps_sorted_view_consistent():
+    est = LatencyEstimator(decay=1.0, window=3)
+    for i, v in enumerate([10.0, 1.0, 2.0, 3.0, 4.0]):
+        est.observe(obs(v, i=i))
+    # only the last 3 observations remain: the early 10.0 outlier is gone
+    assert est.percentile_s(ARCH, "undervolt", 10, 2, 100) == 4.0
+    assert est.percentile_s(ARCH, "undervolt", 10, 2, 0) == 2.0
+
+
+# ------------------------------------------------------- latency history
+def test_estimator_empty_returns_none():
+    est = LatencyEstimator()
+    assert est.estimate_s(ARCH, "undervolt", 10, 2) is None
+    assert est.n_observations(ARCH, "undervolt", 10, 2) == 0
+
+
+def obs(latency, key=(ARCH, "undervolt", 10, 2), i=0):
+    arch, op, steps, bucket = key
+    return BatchObservation(arch=arch, op=op, steps=steps, bucket=bucket,
+                            latency_s=latency, clock_s=0.0, batch_index=i)
+
+
+def test_estimator_tracks_and_guards_with_percentile():
+    est = LatencyEstimator(decay=0.5, conservative_percentile=90.0)
+    for i, v in enumerate([1.0, 1.0, 1.0, 1.0]):
+        est.observe(obs(v, i=i))
+    assert est.estimate_s(ARCH, "undervolt", 10, 2) == pytest.approx(1.0)
+    # one slow outlier: the percentile guard keeps the estimate conservative
+    est.observe(obs(10.0, i=4))
+    e = est.estimate_s(ARCH, "undervolt", 10, 2)
+    assert e == pytest.approx(10.0)     # p90 of [1,1,1,1,10]
+    # keys are isolated
+    assert est.estimate_s(ARCH, "overclock", 10, 2) is None
+    assert est.percentile_s(ARCH, "undervolt", 10, 2, 50) == 1.0
+
+
+# -------------------------------------------- guardband controller (unit)
+def test_guardband_state_machine_hysteresis():
+    ctrl = GuardbandController(target_ber=1e-3,
+                               config=GuardbandConfig(quiet_windows=2))
+    # spike widens immediately
+    assert ctrl.observe_batch(1.0, "undervolt") == "widen"
+    assert ctrl.guard_index == 1
+    # in-band holds and resets the quiet streak
+    assert ctrl.observe_batch(1e-3, "undervolt") == "hold"
+    # one quiet window is not enough (hysteresis)
+    assert ctrl.observe_batch(0.0, "undervolt") == "quiet"
+    assert ctrl.guard_index == 1
+    # second consecutive quiet window re-tightens
+    assert ctrl.observe_batch(0.0, "undervolt") == "tighten"
+    assert ctrl.guard_index == 0
+    # never below zero, never above the ladder top
+    assert ctrl.observe_batch(0.0, "undervolt") == "quiet"
+    assert ctrl.observe_batch(0.0, "undervolt") == "quiet"  # nothing to cut
+    assert ctrl.guard_index == 0
+    for _ in range(10):
+        ctrl.observe_batch(1.0, "undervolt")
+    assert ctrl.guard_index == len(dvfs.OP_LADDER) - 1
+    assert ctrl.clamp(0) == ctrl.guard_index
+    assert ctrl.clamp(ctrl.guard_index + 7) == ctrl.guard_index + 7
+    assert ctrl.realized_ber["undervolt"] > 0.5
+
+
+# -------------------------------- estimator fallback: bit-identical plans
+def submit_plan_stream(sched):
+    """A deterministic mix of deadline'd/priority'd submissions; returns
+    the Admission records (including projections)."""
+    lat = sched.batch_latency_s(ARCH, "undervolt", 10)
+    plans = []
+    for i, (dl, prio) in enumerate([(None, "background"),
+                                    (5.0 * lat, "interactive"),
+                                    (1.2 * lat, "standard"),
+                                    (1e-6, "interactive")]):
+        plans.append(sched.submit(steps=10, mode="drift", op="undervolt",
+                                  priority=prio, deadline_s=dl, seed=i))
+    return plans
+
+
+def test_empty_history_bit_identical_to_perfmodel_only():
+    """Satellite acceptance: with no served-batch history, admission
+    decisions AND clock projections match the telemetry-free scheduler
+    bit for bit (single-device; the 8-device twin lives in
+    test_serving_sharded.py)."""
+    sched_on = DeadlineScheduler(make_engine())
+    sched_off = DeadlineScheduler(
+        make_engine(telemetry=EngineTelemetry(enabled=False)))
+    plans_on = submit_plan_stream(sched_on)
+    plans_off = submit_plan_stream(sched_off)
+    assert plans_on == plans_off       # frozen dataclasses, exact floats
+    for a in plans_on:
+        if a.projected_wait_s is not None:
+            assert isinstance(a.projected_wait_s, float)
+    # the engines then *serve* identically too
+    res_on = {r.request_id: r for r in sched_on.run()}
+    res_off = {r.request_id: r for r in sched_off.run()}
+    assert sorted(res_on) == sorted(res_off)
+    for rid in res_on:
+        assert res_on[rid].completed_at_s == res_off[rid].completed_at_s
+        assert res_on[rid].op == res_off[rid].op
+        assert res_on[rid].steps == res_off[rid].steps
+
+
+def test_use_learned_latency_false_pins_perfmodel():
+    eng = make_engine()
+    sched = DeadlineScheduler(eng, SchedulerConfig(use_learned_latency=False))
+    lat = sched.batch_latency_s(ARCH, "undervolt", 10)
+    eng.telemetry.estimator.observe(obs(100 * lat, key=(ARCH, "undervolt",
+                                                        10, 1)))
+    assert sched.batch_latency_s(ARCH, "undervolt", 10) == lat
+
+
+# --------------------------------- learned estimates flip admission (THE
+# acceptance test for the tentpole's estimator half)
+def test_learned_divergence_flips_admission_decision():
+    eng = make_engine(bucket=1)
+    sched = DeadlineScheduler(eng)
+    lat_uv = sched.batch_latency_s(ARCH, "undervolt", 10)
+
+    # perfmodel says (undervolt, 10 steps) fits this deadline comfortably
+    deadline = 1.5 * lat_uv
+    before = sched.plan(probe(deadline))
+    assert before.admitted and before.action == "as-requested"
+    assert (before.op, before.steps) == ("undervolt", 10)
+
+    # observed reality diverges: this configuration's batches measure 3x
+    # the perfmodel price (per-request overheads the a-priori model never
+    # saw). Feed the history the engine tap would have fed.
+    for i in range(4):
+        eng.telemetry.estimator.observe(
+            obs(3.0 * lat_uv, key=(ARCH, "undervolt", 10, 1), i=i))
+    learned = sched.batch_latency_s(ARCH, "undervolt", 10)
+    assert learned == pytest.approx(3.0 * lat_uv)
+
+    # same submission now flips: undervolt no longer fits, the scheduler
+    # escalates to overclock (whose history is empty -> perfmodel price,
+    # which fits)
+    after = sched.plan(probe(deadline))
+    assert after.admitted and after.action == "escalated-op"
+    assert after.op == "overclock"
+    assert (before.op, before.action) != (after.op, after.action)
+
+
+def probe(deadline):
+    from repro.serving import GenerationRequest
+    return GenerationRequest(request_id=-1, arch=ARCH, steps=10,
+                             mode="drift", op="undervolt",
+                             deadline_s=deadline)
+
+
+def test_clean_mode_history_does_not_contaminate_drift_estimates():
+    """A clean-mode batch bills without ABFT/checkpoint overhead; its
+    history must not be served as the learned estimate for a drift-mode
+    request at the same (arch, op, steps, bucket)."""
+    eng = make_engine(bucket=1)
+    sched = DeadlineScheduler(eng)
+    eng.submit(steps=10, mode="clean", op="nominal", seed=0)
+    eng.run()
+    # the clean batch was observed -- under its own mode key
+    assert eng.telemetry.estimator.n_observations(
+        ARCH, "nominal", 10, 1, mode="clean") == 1
+    assert eng.telemetry.estimator.estimate_s(ARCH, "nominal", 10, 1) \
+        is None                         # default = drift configuration
+    # pricing a drift-mode nominal request falls back to the perfmodel
+    sched.batch_latency_s(ARCH, "nominal", 10)
+    text = eng.telemetry.registry.expose()
+    assert 'drift_projection_source_total{source="learned"}' not in text
+    assert 'drift_projection_source_total{source="perfmodel"}' in text
+
+
+def test_engine_tap_populates_estimator_with_billed_latency():
+    """The estimator learns exactly what the engine bills: after one
+    served batch, the learned estimate equals the result's latency and
+    admission runs on it (projection-source counter says 'learned')."""
+    eng = make_engine(bucket=1)
+    sched = DeadlineScheduler(eng)
+    sched.submit(steps=10, mode="drift", op="undervolt", seed=0)
+    (res,) = sched.run()
+    est = eng.telemetry.estimator.estimate_s(ARCH, "undervolt", 10, 1)
+    assert est == pytest.approx(res.latency_s)
+    assert sched.batch_latency_s(ARCH, "undervolt", 10) == est
+    reg_text = eng.telemetry.registry.expose()
+    assert 'drift_projection_source_total{source="learned"}' in reg_text
+
+
+# --------------------------------------- latency-memo key hygiene (fix)
+def test_latency_memo_keys_on_operating_point_parameters():
+    """The modeled-latency memo must key on resolved op *parameters*:
+    after the ladder (or guardband) moves, pricing "auto" again must
+    re-resolve instead of serving the first call's point."""
+    eng = make_engine(telemetry=EngineTelemetry(enabled=False))
+    sched = DeadlineScheduler(eng)
+    assert eng.auto_op_name() == "undervolt"      # fresh monitor, index 0
+    sched.batch_latency_s(ARCH, "auto", 10)
+    keys0 = set(sched._latency_cache)
+    assert all(isinstance(k[1], float) for k in keys0)   # voltage, not name
+    volt0 = {k[1] for k in keys0}
+    assert volt0 == {dvfs.UNDERVOLT.voltage}
+
+    # ladder walks to nominal; "auto" now prices the nominal parameters
+    eng.monitor = dvfs.BerMonitorState(eng.monitor.ema_ber,
+                                       jnp.int32(len(dvfs.OP_LADDER) - 1),
+                                       eng.monitor.n_updates)
+    assert eng.auto_op_name() == "nominal"
+    lat_auto = sched.batch_latency_s(ARCH, "auto", 10)
+    assert lat_auto == sched.batch_latency_s(ARCH, "nominal", 10)
+    volts = {k[1] for k in sched._latency_cache}
+    assert volts == {dvfs.UNDERVOLT.voltage, dvfs.NOMINAL.voltage}
+    # and no entry was ever keyed by the request-facing name
+    assert not any(k[1] == "auto" for k in sched._latency_cache)
+
+
+# ------------------------------------------- guardband loop (integration)
+def test_detection_spike_widens_then_recovers_within_budget():
+    """Acceptance: an injected detection-count spike lowers the auto
+    ladder's aggressiveness within ONE adaptation window; after the quiet
+    hysteresis it recovers; and the compiled-sampler cache stays within
+    its trace budget (bounded by the ladder, not the batch count)."""
+    box = {"ema": 0.0}
+    eng = make_engine(
+        bucket=1, box=box,
+        telemetry=EngineTelemetry(
+            guardband_config=GuardbandConfig(quiet_windows=2)))
+    ctrl = eng.telemetry.controller
+
+    def serve_auto(seed):
+        eng.submit(steps=4, mode="drift", op="auto", seed=seed)
+        return eng.run()[0]
+
+    r0 = serve_auto(0)
+    assert r0.op == "undervolt" and ctrl.guard_index == 0   # quiet start
+
+    box["ema"] = 1.0                    # detection storm
+    r1 = serve_auto(1)
+    assert r1.op == "undervolt"         # the spike batch itself ran aggressive
+    assert ctrl.guard_index == 1        # ...but the floor rose in one window
+    # the very next auto request is already less aggressive
+    box["ema"] = 0.0
+    r2 = serve_auto(2)
+    assert r2.op == "uv-mild"
+    # quiet_windows=2 consecutive quiet windows re-tighten (r2's batch was
+    # quiet window #1)
+    r3 = serve_auto(3)
+    assert ctrl.guard_index == 0
+    r4 = serve_auto(4)
+    assert r4.op == "undervolt"         # recovered
+    assert ctrl.stats.widenings == 1 and ctrl.stats.tightenings == 1
+
+    # trace budget: every distinct (op, steps) drift config + its clean
+    # reference jits once; the guardband visited 2 ladder points, so
+    # 2 drift traces + 1 clean trace -- bounded by the ladder length, not
+    # the 5 batches served
+    assert eng.cache.traces <= len(dvfs.OP_LADDER) + 1
+    assert eng.cache.traces == 3
+    text = eng.telemetry.registry.expose()
+    assert "drift_guardband_widenings_total 1" in text
+    assert "drift_guardband_tightenings_total 1" in text
+
+
+def test_scheduler_prices_auto_through_guardband_floor():
+    """Admission's cost estimate resolves "auto" through the same floored
+    index the batcher will use -- no stale ladder point."""
+    box = {"ema": 1.0}
+    eng = make_engine(bucket=1, box=box)
+    sched = DeadlineScheduler(eng)
+    eng.submit(steps=4, mode="drift", op="auto", seed=0)
+    eng.run()                           # widens the guardband to 1
+    assert eng.telemetry.controller.guard_index == 1
+    assert sched._concrete_op("auto") == "uv-mild"
+
+
+def test_disabled_telemetry_is_inert():
+    eng = make_engine(telemetry=EngineTelemetry(enabled=False))
+    assert not eng.telemetry.enabled
+    assert eng.telemetry.estimator is None
+    assert eng.telemetry.controller is None
+    eng.submit(steps=4, mode="drift", op="auto", seed=0)
+    (res,) = eng.run()
+    assert res.op == "undervolt"        # bare monitor resolution
+    assert eng.telemetry.learned_latency_s(ARCH, "undervolt", 4, 1) is None
+    assert eng.telemetry.clamp_ladder_index(2) == 2
+    assert eng.telemetry.registry.expose() == "\n"
+
+
+# ----------------------------------------------------- HTTP/SSE front-end
+def fetch(url):
+    # generous timeout: the SSE drain jits the streaming sampler inside
+    # the handler (~10-15s per trace, much more on a loaded CI box)
+    with urllib.request.urlopen(url, timeout=600) as resp:
+        return resp.headers, resp.read().decode("utf-8")
+
+
+def parse_sse(payload):
+    events, kind = [], None
+    for line in payload.splitlines():
+        if line.startswith("event: "):
+            kind = line[len("event: "):]
+        elif line.startswith("data: "):
+            events.append((kind, json.loads(line[len("data: "):])))
+    return events
+
+
+@pytest.fixture()
+def served_engine():
+    eng = make_engine(bucket=1)
+    server = serve_telemetry(eng, port=0)
+    yield eng, server
+    server.close()
+
+
+def test_healthz_and_metrics_endpoints(served_engine):
+    eng, server = served_engine
+    eng.submit(steps=4, mode="drift", op="undervolt", seed=0)
+    eng.run()
+    _, body = fetch(f"{server.url}/healthz")
+    health = json.loads(body)
+    assert health["status"] == "ok"
+    assert health["batches"] == 1
+    assert health["queue_depth"] == 0
+    assert health["telemetry_enabled"] is True
+    headers, text = fetch(f"{server.url}/metrics")
+    assert headers["Content-Type"].startswith("text/plain")
+    for series in ("drift_batches_total", "drift_requests_served_total",
+                   "drift_clock_seconds", "drift_batch_latency_seconds"):
+        assert series in text
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        fetch(f"{server.url}/nope")
+    assert exc.value.code == 404
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        fetch(f"{server.url}/events?interval=zero")
+    assert exc.value.code == 400
+    # arbitrary window lengths are refused: each distinct interval would
+    # compile its own streaming sampler, and an open endpoint must not
+    # grow the compiled-fn cache without bound
+    with pytest.raises(urllib.error.HTTPError) as exc:
+        fetch(f"{server.url}/events?interval=63")
+    assert exc.value.code == 400
+    assert "not allowed" in exc.value.read().decode()
+
+
+def test_sse_stream_matches_in_process_generator(served_engine):
+    """Acceptance: the SSE endpoint delivers the same PreviewEvent
+    sequence as the in-process generator, and the final latents (by
+    digest) are bit-identical to the non-streaming run()."""
+    eng, server = served_engine
+    for i in range(2):
+        eng.submit(steps=6, mode="drift", op="undervolt", seed=i)
+    events = parse_sse(fetch(f"{server.url}/events?interval=2")[1])
+
+    # twin A: in-process streaming generator on an identical engine
+    twin = make_engine(bucket=1)
+    for i in range(2):
+        twin.submit(steps=6, mode="drift", op="undervolt", seed=i)
+    expected = []
+    for ev in twin.run_stream(preview_interval=2):
+        if isinstance(ev, PreviewEvent):
+            expected.append(("preview", preview_wire(ev)))
+        else:
+            expected.append(("result", result_wire(ev)))
+    assert events[:-1] == expected      # same sequence, frame for frame
+    assert events[-1] == ("end", {"served": 2, "previews": 4})
+
+    # twin B: non-streaming run() -- finals bit-identical by digest
+    ref = make_engine(bucket=1)
+    for i in range(2):
+        ref.submit(steps=6, mode="drift", op="undervolt", seed=i)
+    ref_digests = {r.request_id: latents_sha256(r.latents)
+                   for r in ref.run()}
+    sse_results = {d["request_id"]: d["latents_sha256"]
+                   for k, d in events if k == "result"}
+    assert sse_results == ref_digests
+
+
+def test_server_close_before_start_does_not_deadlock():
+    from repro.serving import TelemetryHTTPServer
+    srv = TelemetryHTTPServer(make_engine())
+    srv.close()        # never started: must release the socket and return
+
+
+def test_sse_empty_queue_sends_end_frame(served_engine):
+    _, server = served_engine
+    events = parse_sse(fetch(f"{server.url}/events")[1])
+    assert events == [("end", {"served": 0, "previews": 0})]
+
+
+def test_concurrent_drain_gets_503(served_engine):
+    eng, server = served_engine
+    eng.submit(steps=4, mode="drift", op="undervolt", seed=0)
+    with server.engine_lock:            # simulate an in-flight drain
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            fetch(f"{server.url}/events")
+        assert exc.value.code == 503
+    # lock released: the drain goes through now
+    events = parse_sse(fetch(f"{server.url}/events")[1])
+    assert events[-1][0] == "end" and events[-1][1]["served"] == 1
+
+
+@pytest.mark.slow
+def test_sse_bit_identity_real_model():
+    """Real smoke DiT through the wire: >= 1 SSE preview and the SSE
+    result digest equals the non-streaming run() latents digest."""
+    steps = 4
+    ref = DriftServeEngine(arch=ARCH, smoke=True, bucket=1)
+    ref.submit(steps=steps, mode="drift", op="undervolt", seed=0)
+    (ref_res,) = ref.run()
+
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=1)
+    eng.submit(steps=steps, mode="drift", op="undervolt", seed=0)
+    with serve_telemetry(eng, port=0) as server:
+        events = parse_sse(fetch(f"{server.url}/events?interval=2")[1])
+    kinds = [k for k, _ in events]
+    assert kinds.count("preview") >= 1 and kinds.count("result") == 1
+    (result,) = [d for k, d in events if k == "result"]
+    assert result["latents_sha256"] == latents_sha256(ref_res.latents)
+    # the sampler's stream-window tap fired once per jitted window
+    windows = eng.telemetry.registry.counter("drift_stream_windows_total")
+    assert windows.value == steps // 2
+
+
+# ------------------------------------------------------ CLI wiring smoke
+def test_serve_cli_builds_disabled_telemetry_engine():
+    from repro.launch import serve as serve_cli
+    args = serve_cli.build_parser().parse_args(
+        ["--batch", "1", "--no-telemetry"])
+    eng = serve_cli.build_engine(args)
+    assert not eng.telemetry.enabled
+    args = serve_cli.build_parser().parse_args(["--batch", "1"])
+    assert serve_cli.build_engine(args).telemetry.enabled

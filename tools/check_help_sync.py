@@ -25,7 +25,8 @@ CLIS = (
     [sys.executable, "examples/drift_serve.py", "--help"],
 )
 REQUIRED_FLAGS = ("--op", "--priority", "--deadline", "--step-budget",
-                  "--stream", "--batch", "--steps")
+                  "--stream", "--batch", "--steps",
+                  "--metrics-port", "--no-telemetry")
 
 
 def main() -> int:

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Smoke the telemetry HTTP front-end end to end (the CI telemetry job).
+
+Boots a real (smoke-model) serving engine with the HTTP front-end,
+then -- as an external client would --
+
+* curls ``/healthz`` and asserts the JSON liveness payload,
+* curls ``/metrics`` and asserts the Prometheus exposition carries the
+  core serving series,
+* opens the SSE ``/events`` stream and consumes at least one ``preview``
+  frame and the terminating ``result``/``end`` frames,
+
+and shuts the server down. Uses the ``curl`` binary when present (the
+point of the job is the wire, not the Python client); falls back to
+urllib where curl is missing so the script also runs in bare containers.
+
+Run from the repo root (CI: .github/workflows/ci.yml, telemetry job):
+
+    PYTHONPATH=src python tools/smoke_telemetry.py
+"""
+import json
+import shutil
+import subprocess
+import sys
+import urllib.request
+
+sys.path.insert(0, "src")
+
+from repro.serving import DriftServeEngine, serve_telemetry  # noqa: E402
+
+STEPS, PREVIEW_EVERY = 4, 2
+
+
+def fetch(url: str) -> str:
+    # no client timeout shorter than a loaded CI box needs: the SSE drain
+    # jits the streaming sampler inside the handler
+    if shutil.which("curl"):
+        return subprocess.run(["curl", "-sS", "--fail", "--max-time", "600",
+                               url],
+                              capture_output=True, text=True,
+                              check=True).stdout
+    with urllib.request.urlopen(url, timeout=600) as resp:
+        return resp.read().decode("utf-8")
+
+
+def parse_sse(payload: str):
+    """[(event, data-dict)] from a complete SSE stream body."""
+    events = []
+    kind = None
+    for line in payload.splitlines():
+        if line.startswith("event: "):
+            kind = line[len("event: "):]
+        elif line.startswith("data: "):
+            events.append((kind, json.loads(line[len("data: "):])))
+    return events
+
+
+def main() -> int:
+    print("[smoke] building engine + serving one warm-up batch")
+    engine = DriftServeEngine(arch="dit-xl-512", smoke=True, bucket=1)
+    engine.submit(steps=STEPS, mode="drift", op="undervolt", seed=0)
+    engine.run()                       # telemetry has real series to expose
+
+    server = serve_telemetry(engine, port=0)
+    base = server.url
+    print(f"[smoke] telemetry at {base} "
+          f"(client: {'curl' if shutil.which('curl') else 'urllib'})")
+    try:
+        health = json.loads(fetch(f"{base}/healthz"))
+        assert health["status"] == "ok", health
+        assert health["batches"] >= 1, health
+        print(f"[smoke] /healthz ok: clock={health['clock_s']:.4f}s "
+              f"batches={health['batches']}")
+
+        metrics = fetch(f"{base}/metrics")
+        for series in ("drift_batches_total", "drift_batch_latency_seconds",
+                       "drift_monitor_ema_ber", "drift_clock_seconds"):
+            assert series in metrics, f"/metrics missing {series}"
+        print(f"[smoke] /metrics ok: {len(metrics.splitlines())} lines")
+
+        # a fresh request for the SSE drain to stream
+        engine.submit(steps=STEPS, mode="drift", op="undervolt", seed=1)
+        events = parse_sse(fetch(f"{base}/events?interval={PREVIEW_EVERY}"))
+        kinds = [k for k, _ in events]
+        assert kinds.count("preview") >= 1, kinds
+        assert kinds.count("result") == 1, kinds
+        assert kinds[-1] == "end", kinds
+        preview = next(d for k, d in events if k == "preview")
+        result = next(d for k, d in events if k == "result")
+        assert preview["step"] < preview["total_steps"] == STEPS
+        assert len(result["latents_sha256"]) == 64
+        print(f"[smoke] /events ok: {kinds.count('preview')} previews, "
+              f"1 result, digest {result['latents_sha256'][:12]}…")
+    finally:
+        server.close()
+    print("[smoke] telemetry front-end smoke PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
