@@ -47,8 +47,10 @@ import argparse
 import contextlib
 
 from repro.core import dvfs as dvfs_lib
+from repro.core.rollback import DEFAULT_INTERVAL
+from repro.launch.serve import rollback_interval_arg
 from repro.serving import (DeadlineScheduler, DriftServeEngine,
-                           EngineTelemetry, PreviewEvent,
+                           EngineTelemetry, OffloadConfig, PreviewEvent,
                            ShardedDriftServeEngine, make_engine,
                            serve_telemetry)
 from repro.serving.request import REQUEST_PRIORITIES
@@ -83,6 +85,16 @@ def build_parser():
     ap.add_argument("--stream", type=int, default=0, metavar="K",
                     help="yield latent previews every K denoising steps "
                          "(0 = off)")
+    ap.add_argument("--rollback-interval", type=rollback_interval_arg,
+                    default=DEFAULT_INTERVAL, metavar="N|auto",
+                    dest="rollback_interval",
+                    help="rollback checkpoint-refresh interval "
+                         f"(default: {DEFAULT_INTERVAL}, from "
+                         "core.rollback.DEFAULT_INTERVAL); 'auto' = the "
+                         "offload planner's per-configuration choice")
+    ap.add_argument("--offload", action="store_true",
+                    help="async host offload of rollback checkpoints, "
+                         "overlapped with the next window (docs/offload.md)")
     ap.add_argument("--sharded", action="store_true",
                     help="spread micro-batches across the device mesh")
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -108,16 +120,18 @@ def main():
         raise SystemExit("--op/--priority/--deadline need at least one "
                          "non-empty entry")
     telemetry = EngineTelemetry(enabled=not args.no_telemetry)
+    offload = OffloadConfig() if args.offload else None
     if args.sharded:
         engine = make_engine(arch="dit-xl-512", smoke=True,
                              bucket=args.batch,
                              model_parallel=args.model_parallel,
-                             telemetry=telemetry)
+                             telemetry=telemetry, offload=offload)
     else:
         if args.model_parallel != 1:
             raise SystemExit("--model-parallel requires --sharded")
         engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
-                                  bucket=args.batch, telemetry=telemetry)
+                                  bucket=args.batch, telemetry=telemetry,
+                                  offload=offload)
     server = None
     if args.metrics_port is not None:
         server = serve_telemetry(engine, port=args.metrics_port)
@@ -145,7 +159,8 @@ def _drive(args, engine, server, ops, priorities, deadlines):
     with drain_lock:
         for i in range(args.requests):
             fields = dict(steps=args.steps, mode="drift",
-                          op=ops[i % len(ops)], seed=i)
+                          op=ops[i % len(ops)], seed=i,
+                          rollback_interval=args.rollback_interval)
             if sched is not None:
                 adm = sched.submit(priority=priorities[i % len(priorities)],
                                    deadline_s=deadlines[i % len(deadlines)],
@@ -184,11 +199,13 @@ def _drive(args, engine, server, ops, priorities, deadlines):
               f"monitor_ber={r.monitor_ber:.2e}{miss}")
 
     distinct = len({(r.op, r.mode, r.steps) for r in results})
-    # one-shot: one trace per distinct config; streamed: a window plus
-    # possibly a remainder window per config -> at most two traces per
-    # distinct config. Clean references are keyed by step count (the
-    # scheduler may trim steps per request), one one-shot trace each.
-    per_config = 2 if args.stream else 1
+    # one-shot: one trace per distinct config; streamed OR offloaded
+    # (offload runs the windowed sampler with the refresh interval as the
+    # window): a window plus possibly a remainder window per config -> at
+    # most two traces per distinct config. Clean references are keyed by
+    # step count (the scheduler may trim steps per request), one one-shot
+    # trace each.
+    per_config = 2 if (args.stream or args.offload) else 1
     clean_configs = len({r.steps for r in results})
     expected_traces = distinct * per_config + clean_configs
     print(f"engine: {engine.stats.batches} batches, {engine.cache.traces} "
@@ -213,6 +230,11 @@ def _drive(args, engine, server, ops, priorities, deadlines):
         print(f"telemetry: {est.total_observations} latency observations "
               f"over {len(est)} configs; guardband floor "
               f"{engine.telemetry.controller.guard_index}")
+    if engine.offload_store is not None:
+        ost = engine.offload_store.stats
+        print(f"offload: {ost.commits} commits, "
+              f"{ost.bytes_offloaded / 1e6:.2f} MB offloaded, "
+              f"{ost.restores} restores")
 
 
 if __name__ == "__main__":

@@ -21,10 +21,18 @@ import jax.numpy as jnp
 
 CkptStore = Dict[str, jax.Array]
 
+# The paper's default checkpoint-refresh cadence (Sec 6.4). THE single
+# source of truth: RollbackConfig, GenerationRequest, SamplerKey, the
+# perfmodel's RunConfig, and both serving CLIs' --rollback-interval help
+# strings all derive from this constant (tools/check_help_sync.py asserts
+# the rendered default matches). The serving offload planner
+# (repro.serving.offload.planner) can replace it per operating point.
+DEFAULT_INTERVAL = 10
+
 
 @dataclasses.dataclass(frozen=True)
 class RollbackConfig:
-    interval: int = 10          # offload checkpoints every n steps (Sec 6.4)
+    interval: int = DEFAULT_INTERVAL   # refresh checkpoints every n steps
     enabled: bool = True
 
 

@@ -246,6 +246,7 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
                   monitor0: Optional[dvfs_lib.BerMonitorState] = None,
                   window: int = 1,
                   on_window: Optional[Callable[[int], None]] = None,
+                  on_carry: Optional[Callable[[int, Tuple], None]] = None,
                   _window_runner: Optional[Callable] = None):
     """Generator form of :func:`sample`: the same denoising scan chunked
     into windows of ``window`` steps, yielding a :class:`StreamEvent`
@@ -260,7 +261,12 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
     and small smoke runs). ``on_window`` is a host-side tap fired with the
     completed-step count after every window (including the last) -- the
     serving telemetry counts stream windows with it; it never runs inside
-    a trace, so it cannot perturb the computation.
+    a trace, so it cannot perturb the computation. ``on_carry`` is the
+    same tap handed the full scan carry as well (completed steps, carry)
+    -- the checkpoint-offload store snapshots the carry's rollback stores
+    through it (``repro.serving.offload``); like ``on_window`` it runs
+    strictly host-side between windows, so enabling it cannot change the
+    computed latents.
     """
     assert window >= 1, window
     sched, ts, t_prev, ber_table = _schedule_arrays(cfg)
@@ -279,6 +285,8 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
         xs_slice = tuple(x[start:start + window] for x in xs)
         carry = _window_runner(params, key, cond, text, carry, xs_slice)
         done = min(start + window, n)
+        if on_carry is not None:
+            on_carry(done, carry)
         if on_window is not None:
             on_window(done)
         if done < n:
@@ -291,7 +299,8 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
                  on_trace: Optional[Callable[[], None]] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  stream_window: int = 0,
-                 on_window: Optional[Callable[[int], None]] = None):
+                 on_window: Optional[Callable[[int], None]] = None,
+                 on_carry: Optional[Callable[[int, Tuple], None]] = None):
     """Build a reusable jitted sampling entry point for one configuration.
 
     Returns ``run(params, key, latents0, cond, text, monitor0)`` ->
@@ -324,6 +333,11 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
     cache on the window size (``SamplerKey.stream``). ``on_window`` (only
     meaningful with ``stream_window``) fires host-side after each completed
     window with the done-step count -- the serving telemetry's stream tap.
+    ``on_carry`` additionally hands that tap the scan carry itself: the
+    async checkpoint-offload store (``repro.serving.offload``) commits the
+    carry's rollback stores host-side through it, overlapped with the next
+    window. Both hooks run outside any trace and cannot change the
+    computation.
     """
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
@@ -366,6 +380,7 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
             return sample_stream(model_cfg, params, key, latents0, cond,
                                  text, cfg, monitor0=monitor0,
                                  window=stream_window, on_window=on_window,
+                                 on_carry=on_carry,
                                  _window_runner=window_jit)
         return _run_stream
 

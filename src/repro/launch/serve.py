@@ -49,8 +49,9 @@ import time
 from typing import Optional, Sequence
 
 from repro.core import dvfs as dvfs_lib
+from repro.core.rollback import DEFAULT_INTERVAL
 from repro.serving import (DeadlineScheduler, DriftServeEngine,
-                           EngineTelemetry, PreviewEvent,
+                           EngineTelemetry, OffloadConfig, PreviewEvent,
                            ShardedDriftServeEngine, make_engine,
                            serve_telemetry)
 from repro.serving.request import REQUEST_OPS, REQUEST_PRIORITIES
@@ -58,6 +59,18 @@ from repro.serving.request import REQUEST_OPS, REQUEST_PRIORITIES
 # Derived from code so --help can never drift out of sync with the ladder
 # (tools/check_help_sync.py asserts every name appears in the help text).
 OP_LADDER_HELP = " -> ".join(p.name for p in dvfs_lib.OP_LADDER)
+
+
+def rollback_interval_arg(value: str):
+    """--rollback-interval parser: a positive int or 'auto' (the offload
+    planner picks per configuration)."""
+    if value.strip().lower() == "auto":
+        return "auto"
+    iv = int(value)
+    if iv < 1:
+        raise argparse.ArgumentTypeError(
+            f"rollback interval must be >= 1 or 'auto', got {value}")
+    return iv
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -82,8 +95,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--op", default="undervolt", choices=list(REQUEST_OPS),
                     help="DVFS operating point; 'auto' walks the BER-monitor "
                          f"ladder core.dvfs.OP_LADDER ({OP_LADDER_HELP})")
-    ap.add_argument("--interval", type=int, default=10,
-                    help="rollback checkpoint-refresh interval (steps)")
+    ap.add_argument("--rollback-interval", "--interval",
+                    type=rollback_interval_arg, default=DEFAULT_INTERVAL,
+                    metavar="N|auto", dest="rollback_interval",
+                    help="rollback checkpoint-refresh interval in steps "
+                         f"(default: {DEFAULT_INTERVAL}, from "
+                         "core.rollback.DEFAULT_INTERVAL); 'auto' lets the "
+                         "offload planner pick per (arch, op, steps, "
+                         "bucket) from modeled energy+stall and the "
+                         "telemetry detection history")
+    ap.add_argument("--offload", action="store_true",
+                    help="offload rollback checkpoints to a host-side "
+                         "double buffer asynchronously, overlapped with "
+                         "the next denoising window (tile-contiguous "
+                         "layout; finals stay bit-identical -- see "
+                         "docs/offload.md)")
     ap.add_argument("--taylorseer", action="store_true")
     ap.add_argument("--priority", default="standard",
                     choices=list(REQUEST_PRIORITIES),
@@ -125,7 +151,8 @@ def build_parser() -> argparse.ArgumentParser:
 def build_engine(args) -> DriftServeEngine:
     common = dict(arch=args.arch, smoke=args.smoke, bucket=args.batch,
                   base_seed=args.seed,
-                  telemetry=EngineTelemetry(enabled=not args.no_telemetry))
+                  telemetry=EngineTelemetry(enabled=not args.no_telemetry),
+                  offload=OffloadConfig() if args.offload else None)
     if args.sharded:
         return make_engine(model_parallel=args.model_parallel, **common)
     if args.model_parallel != 1:
@@ -164,7 +191,7 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
     sched = DeadlineScheduler(eng) if use_scheduler else None
     fields = dict(arch=args.arch, smoke=args.smoke, steps=args.steps,
                   mode=args.mode, op=args.op, taylorseer=args.taylorseer,
-                  rollback_interval=args.interval)
+                  rollback_interval=args.rollback_interval)
     # Hold the server's engine lock from first submission through the
     # drain: a concurrent /events client gets a clean 503 instead of
     # interleaving batches -- or stealing the just-submitted queue.
@@ -222,6 +249,12 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
           f"ber={float(eng.monitor.ema_ber):.2e} "
           f"ladder={int(eng.monitor.op_index)}; clock {eng.clock_s:.3f}s, "
           f"{eng.stats.deadline_misses} deadline misses")
+    if eng.offload_store is not None:
+        ost = eng.offload_store.stats
+        print(f"  offload: {ost.commits} commits "
+              f"({ost.bytes_offloaded / 1e6:.2f} MB tile-contiguous), "
+              f"{ost.skipped} spike-skipped, {ost.restores} restores; "
+              f"last committed step {eng.offload_store.committed_step}")
     if sched is not None:
         s = sched.stats
         print(f"  scheduler: {s.admitted}/{s.submitted} admitted "

@@ -24,6 +24,7 @@ import dataclasses
 from typing import Dict
 
 from repro.core import dvfs as dvfs_lib
+from repro.core.rollback import DEFAULT_INTERVAL
 from repro.models.common import ModelConfig
 from repro.perfmodel import flops as flops_lib
 from repro.perfmodel import scalesim
@@ -36,7 +37,7 @@ class RunConfig:
     nominal_steps: int = 2
     aggressive: dvfs_lib.OperatingPoint = dvfs_lib.UNDERVOLT
     abft_enabled: bool = True
-    ckpt_interval: int = 10
+    ckpt_interval: int = DEFAULT_INTERVAL
     embed_mac_fraction: float = 0.02     # embeds' share of per-step MACs
     taylorseer_interval: int = 0         # 0 = disabled
     recovery_tiles_per_step: float = 0.0  # from simulation stats

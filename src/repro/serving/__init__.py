@@ -49,6 +49,15 @@ front-end::
     print(server.url)
     ...
     server.close()
+
+Async checkpoint offload (``repro.serving.offload``, docs/offload.md)
+moves the rollback checkpoint store out of the sampling scan: with
+``DriftServeEngine(offload=OffloadConfig())`` every monitored batch's
+store snapshots commit to a double-buffered host buffer between
+denoising windows on a background thread (tile-contiguous layout,
+restore-on-rollback), the planner resolves
+``rollback_interval="auto"`` per configuration, and finals stay
+bit-identical to an offload-free engine.
 """
 from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
@@ -59,11 +68,14 @@ from repro.serving.request import (PRIORITY_RANK, REQUEST_OPS,
 from repro.serving.scheduler import (Admission, DeadlineScheduler,
                                      PriorityMicroBatcher, SchedulerConfig,
                                      SchedulerStats)
+from repro.serving.offload import (IntervalPlan, OffloadConfig,
+                                   OffloadPlanner, OffloadStats,
+                                   OffloadStore)
 from repro.serving.sharded import ShardedDriftServeEngine, make_engine
 from repro.serving.telemetry import (EngineTelemetry, GuardbandConfig,
                                      GuardbandController, LatencyEstimator,
                                      MetricsRegistry, TelemetryHTTPServer,
-                                     serve_telemetry)
+                                     aggregate_metrics, serve_telemetry)
 
 __all__ = [
     "DriftServeEngine", "ShardedDriftServeEngine", "make_engine",
@@ -74,7 +86,9 @@ __all__ = [
     "CompiledSamplerCache", "SamplerKey",
     "DeadlineScheduler", "PriorityMicroBatcher", "SchedulerConfig",
     "SchedulerStats", "Admission",
+    "OffloadConfig", "OffloadStats", "OffloadStore", "OffloadPlanner",
+    "IntervalPlan",
     "EngineTelemetry", "MetricsRegistry", "LatencyEstimator",
     "GuardbandController", "GuardbandConfig", "TelemetryHTTPServer",
-    "serve_telemetry",
+    "serve_telemetry", "aggregate_metrics",
 ]

@@ -44,7 +44,8 @@ class MicroBatch:
 
 
 def request_key(req: GenerationRequest, bucket: int, resolved_op: str,
-                extra: Optional[Dict[str, object]] = None) -> SamplerKey:
+                extra: Optional[Dict[str, object]] = None,
+                resolved_interval: Optional[int] = None) -> SamplerKey:
     """SamplerKey for a request whose operating point is already resolved.
 
     This is the whole bucketing predicate: two requests co-batch iff their
@@ -66,13 +67,22 @@ def request_key(req: GenerationRequest, bucket: int, resolved_op: str,
     the sharded engine stamps its (mesh_shape, batch_spec) placement here
     so two engines on different meshes never alias a compiled fn, and the
     streaming path stamps ``stream`` (the preview window) per run.
+
+    ``resolved_interval`` is the concrete checkpoint-refresh interval for
+    a ``rollback_interval="auto"`` request (the engine resolves it through
+    the offload planner, exactly like ``op="auto"`` through the monitor
+    ladder); a key must never carry the "auto" sentinel.
     """
+    interval = (resolved_interval if resolved_interval is not None
+                else req.rollback_interval)
+    assert not isinstance(interval, str), \
+        "resolve rollback_interval='auto' before building a SamplerKey"
     key = SamplerKey(arch=req.arch, smoke=req.smoke, steps=req.steps,
                      mode=req.mode,
                      op="" if req.mode == "clean" else resolved_op,
                      bucket=bucket,
                      taylorseer=req.taylorseer,
-                     rollback_interval=req.rollback_interval)
+                     rollback_interval=interval)
     return dataclasses.replace(key, **extra) if extra else key
 
 
@@ -87,16 +97,22 @@ class MicroBatcher:
         self.key_extra = dict(key_extra or {})
 
     def next_batch(self, queue: RequestQueue,
-                   resolve_op: Callable[[GenerationRequest], str]
+                   resolve_op: Callable[[GenerationRequest], str],
+                   resolve_interval: Optional[
+                       Callable[[GenerationRequest], int]] = None
                    ) -> MicroBatch:
         """Pop the next bucket. ``resolve_op`` maps a request to a concrete
-        operating-point name (handling "auto" via the monitor ladder); it is
-        applied per-request while scanning, so two "auto" requests land in
-        the same bucket only if they resolve identically."""
+        operating-point name (handling "auto" via the monitor ladder) and
+        ``resolve_interval`` to a concrete rollback interval (handling
+        "auto" via the offload planner; None = use the request's int);
+        both are applied per-request while scanning, so two "auto"
+        requests land in the same bucket only if they resolve
+        identically."""
         head = queue.peek()
         assert head is not None, "next_batch on an empty queue"
-        key_of = lambda r: request_key(r, self.bucket, resolve_op(r),
-                                       self.key_extra)
+        key_of = lambda r: request_key(
+            r, self.bucket, resolve_op(r), self.key_extra,
+            resolve_interval(r) if resolve_interval is not None else None)
         key = key_of(head)
         reqs = queue.take_matching(key, key_of, self.bucket)
         return MicroBatch(key=key, requests=reqs)

@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Tuple
 
+from repro.core.rollback import DEFAULT_INTERVAL
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplerKey:
@@ -28,7 +30,9 @@ class SamplerKey:
     op: str            # operating-point name; "" when no DVFS schedule
     bucket: int        # compiled batch size
     taylorseer: bool = False
-    rollback_interval: int = 10
+    # Always a concrete int here: "auto" requests resolve through the
+    # offload planner (engine.auto_rollback_interval) before keying.
+    rollback_interval: int = DEFAULT_INTERVAL
     # Sharded-engine placement (empty on the single-device path): the mesh
     # axes/sizes the bucket is spread over and the latents batch
     # PartitionSpec, both rendered hashable. Different meshes bake

@@ -61,7 +61,20 @@ The engine is single-threaded by design: batches run sequentially so the
 BER-monitor feedback is well-ordered. ``serving/sharded.py`` extends this
 exact loop across a device mesh (one micro-batch spread over the ``data``
 axis, params sharded per ``repro.distributed.sharding``) without changing
-the ordering guarantee; async offload layers on later (see ROADMAP).
+the ordering guarantee.
+
+Async checkpoint offload (``offload=OffloadConfig()``, the CLIs'
+``--offload``; docs/offload.md): monitored-mode batches run the windowed
+sampler with the rollback refresh interval as the window, and a
+double-buffered host store snapshots the scan carry's checkpoint stores
+between windows on a background thread -- overlapped with the next
+window's compute, which is the only concurrency in the engine and is
+invisible to it (the store is joined before batch accounting). Finals are
+bit-identical with offload on or off; the modeled residual refresh stall
+is charged on the virtual clock and in the scheduler's projections, and
+``rollback_interval="auto"`` requests resolve their refresh interval
+through the offload planner (``auto_rollback_interval``, the
+``auto_op_index`` analogue).
 
 Architecture walk-through: ``docs/serving.md``.
 """
@@ -85,6 +98,7 @@ from repro.diffusion.taylorseer import TaylorSeerConfig
 from repro.perfmodel import energy
 from repro.serving.batcher import MicroBatch, MicroBatcher
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
+from repro.serving.offload import OffloadConfig, OffloadPlanner, OffloadStore
 from repro.serving.request import (GenerationRequest, PreviewEvent,
                                    RequestQueue, RequestResult)
 from repro.serving.telemetry import EngineTelemetry
@@ -122,6 +136,10 @@ class _BatchCtx:
     cond: object
     text: object
     run_key: object
+    # Filled by the offload-enabled drains after joining the store: this
+    # batch's OffloadStats delta for the telemetry tap. None = no offload
+    # ran for this batch.
+    offload_delta: Optional[object] = None
 
 
 class DriftServeEngine:
@@ -134,7 +152,8 @@ class DriftServeEngine:
                  clean_cache_size: int = 8,
                  sampler_factory: Optional[Callable] = None,
                  energy_model: Optional[energy.EnergyModel] = None,
-                 telemetry: Optional[EngineTelemetry] = None):
+                 telemetry: Optional[EngineTelemetry] = None,
+                 offload: Optional[OffloadConfig] = None):
         self.default_arch = arch
         self.default_smoke = smoke
         self.nominal_steps = nominal_steps
@@ -170,9 +189,24 @@ class DriftServeEngine:
             sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
                                      stream_window=key.stream,
                                      on_window=self.telemetry
-                                     .on_stream_window))
+                                     .on_stream_window,
+                                     on_carry=self._offload_on_carry))
         self._energy_model = energy_model
         self._full_cfgs: Dict[str, object] = {}
+        # Async checkpoint offload (repro.serving.offload, docs/offload.md):
+        # one double-buffered host store for the whole (single-threaded)
+        # engine, rebound per batch; None = disabled, which is also the
+        # bit-identical baseline the offload tests compare against. The
+        # planner exists regardless so rollback_interval="auto" requests
+        # resolve even on an offload-free engine.
+        self.offload_cfg = offload if (offload is None or offload.enabled) \
+            else None
+        self._offload_store = (OffloadStore(self.offload_cfg)
+                               if self.offload_cfg is not None else None)
+        self._active_offload: Optional[OffloadStore] = None
+        self._planner: Optional[OffloadPlanner] = None
+        self._interval_memo: Dict[Tuple, int] = {}
+        self._stall_memo: Dict[Tuple, float] = {}
 
     # ------------------------------------------------------------- intake
     def submit(self, **fields) -> int:
@@ -213,7 +247,8 @@ class DriftServeEngine:
         submission order regardless of how batching regrouped them."""
         results: Dict[int, RequestResult] = {}
         while len(self.queue):
-            mb = self.batcher.next_batch(self.queue, self._resolve_op)
+            mb = self.batcher.next_batch(self.queue, self._resolve_op,
+                                         self._resolve_interval)
             for res in self._run_batch(mb):
                 results[res.request_id] = res
         return [results[rid] for rid in sorted(results)]
@@ -233,7 +268,8 @@ class DriftServeEngine:
         """
         assert preview_interval >= 1, preview_interval
         while len(self.queue):
-            mb = self.batcher.next_batch(self.queue, self._resolve_op)
+            mb = self.batcher.next_batch(self.queue, self._resolve_op,
+                                         self._resolve_interval)
             yield from self._run_batch_stream(mb, preview_interval)
 
     def _resolve_op(self, req: GenerationRequest) -> str:
@@ -251,6 +287,115 @@ class DriftServeEngine:
 
     def auto_op_name(self) -> str:
         return dvfs_lib.ladder_op(self.auto_op_index()).name
+
+    # -------------------------------------------- rollback-interval auto
+    def _resolve_interval(self, req: GenerationRequest) -> int:
+        """Concrete checkpoint-refresh interval for one request: its own
+        int, or -- for ``rollback_interval="auto"`` -- the offload
+        planner's choice for (arch, resolved op, steps, bucket)."""
+        if req.rollback_interval == "auto":
+            return self.auto_rollback_interval(req.arch,
+                                               self._resolve_op(req),
+                                               req.steps)
+        return int(req.rollback_interval)
+
+    # public alias: the scheduler prices learned-estimator keys with it
+    resolve_interval = _resolve_interval
+
+    def auto_rollback_interval(self, arch: str, op_name: str,
+                               steps: int) -> int:
+        """The ``rollback_interval="auto"`` resolution point (the
+        ``auto_op_index`` analogue): the offload planner's argmin interval
+        for this configuration, with the detection rate taken from the
+        telemetry history (guardband controller's realized BER for the
+        operating point) and falling back to the monitor target.
+        Memoized per (arch, op, steps, bucket, quantized detection rate)
+        so the ladder's adaptation can move the choice without re-running
+        the sweep every submit."""
+        rate = self._detect_rate(op_name, arch)
+        bucket = self.batcher.bucket
+        key = (arch, op_name, steps, bucket, f"{rate:.1e}")
+        cached = self._interval_memo.get(key)
+        if cached is None:
+            op = OP_BY_NAME.get(op_name, dvfs_lib.NOMINAL)
+            plan = self._planner_for().plan(self._full_cfg(arch), op,
+                                            steps, bucket,
+                                            detect_rate=rate)
+            cached = self._interval_memo[key] = plan.interval
+        return cached
+
+    def _detect_rate(self, op_name: str, arch: str) -> float:
+        """Expected rollback-triggering detections per denoising step, in
+        [0, 1]: realized BER (telemetry EWMA for this op when history
+        exists, monitor target otherwise) times the per-step GEMM word
+        count, saturated -- at realistic BERs every step sees a
+        detection, so the planner's trade is refresh traffic vs
+        staleness, exactly Sec 6.4's."""
+        ber = None
+        ctrl = self.telemetry.controller if self.telemetry.enabled else None
+        if ctrl is not None:
+            ber = ctrl.realized_ber.get(op_name)
+        if ber is None:
+            ber = self.monitor_target_ber
+        words = energy.activation_bytes(self._full_cfg(arch), 1) / 4.0
+        return min(1.0, float(ber) * words)
+
+    def _planner_for(self) -> OffloadPlanner:
+        if self._planner is None:
+            cfg = self.offload_cfg or OffloadConfig()
+            self._planner = OffloadPlanner(
+                em=self._energy_model_for(),
+                nominal_steps=self.nominal_steps,
+                repacked=cfg.repacked, overlapped=cfg.async_commit,
+                tile_m=cfg.tile_m, tile_n=cfg.tile_n)
+        return self._planner
+
+    def offload_stall_s(self, arch: str, op_name: str, steps: int,
+                        interval, mode: str = "drift") -> float:
+        """Modeled residual refresh stall one batch of this configuration
+        pays with offload enabled (0.0 when offload is off or the mode
+        never writes checkpoints). Charged on the virtual clock by
+        ``_finish_batch`` and by the scheduler's perfmodel projection --
+        the learned estimator sees it implicitly through observed batch
+        latencies."""
+        if self._offload_store is None or mode not in _MONITORED_MODES:
+            return 0.0
+        if interval == "auto":
+            interval = self.auto_rollback_interval(arch, op_name, steps)
+        key = (arch, op_name, steps, int(interval))
+        cached = self._stall_memo.get(key)
+        if cached is None:
+            op = OP_BY_NAME.get(op_name, dvfs_lib.NOMINAL)
+            cached = self._stall_memo[key] = \
+                self._planner_for().residual_stall_s(
+                    self._full_cfg(arch), op, steps, self.batcher.bucket,
+                    int(interval))
+        return cached
+
+    @property
+    def offload_store(self) -> Optional[OffloadStore]:
+        """The engine's checkpoint-offload store, or None when offload is
+        disabled -- the public handle for CLIs/benchmarks reading commit
+        stats or driving a restore."""
+        return self._offload_store
+
+    def _offload_for(self, key: SamplerKey) -> Optional[OffloadStore]:
+        """This batch's offload store, or None: only monitored modes
+        write rollback checkpoints worth offloading (clean/faulty/
+        float_clean batches run storeless semantics)."""
+        if self._offload_store is None or key.mode not in _MONITORED_MODES:
+            return None
+        return self._offload_store
+
+    def _offload_on_carry(self, done_steps: int, carry) -> None:
+        """Sampler window-boundary tap (``make_sampler(on_carry=...)``):
+        forwards the scan carry to the batch's bound offload store. A
+        no-op unless ``_run_batch[_stream]`` armed a store -- so the hook
+        is threaded unconditionally and costs one attribute read when
+        offload is off."""
+        store = self._active_offload
+        if store is not None:
+            store.on_window(done_steps, carry)
 
     def _sampler_key_extra(self, bucket: int) -> Dict[str, object]:
         """SamplerKey fields stamped by the engine rather than the request
@@ -363,9 +508,36 @@ class DriftServeEngine:
 
     def _run_batch(self, mb: MicroBatch) -> List[RequestResult]:
         ctx = self._prepare_batch(mb)
-        fn = self.cache.get(mb.key, self._build_sampler)
-        out = fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond, ctx.text,
-                 self.monitor)
+        store = self._offload_for(mb.key)
+        if store is None:
+            fn = self.cache.get(mb.key, self._build_sampler)
+            out = fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
+                     ctx.text, self.monitor)
+            return self._finish_batch(mb, ctx, out)
+        # Offload-enabled one-shot path: run the windowed sampler with the
+        # refresh interval as the window so every committed snapshot
+        # offloads between windows, overlapped with the next window's
+        # dispatch. Streamed finals are bit-identical to the one-shot
+        # scan (the PR 3 invariant), so enabling offload cannot change a
+        # single latent bit -- tests/test_offload.py asserts exactly that.
+        window = min(mb.key.rollback_interval, mb.key.steps)
+        skey = dataclasses.replace(mb.key, stream=window)
+        fn = self.cache.get(skey, self._build_sampler)
+        out = None
+        store.begin_batch(interval=mb.key.rollback_interval,
+                          batch_index=ctx.batch_index)
+        self._active_offload = store
+        try:
+            for ev in fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
+                         ctx.text, self.monitor):
+                if isinstance(ev, sampler_lib.SampleOutput):
+                    out = ev           # previews are discarded: run() only
+        finally:
+            self._active_offload = None
+            # join the in-flight commit; the settled delta feeds the
+            # telemetry tap in _finish_batch
+            ctx.offload_delta = store.finish_batch()
+        assert out is not None, "offload sampler ended without SampleOutput"
         return self._finish_batch(mb, ctx, out)
 
     def _run_batch_stream(self, mb: MicroBatch, preview_interval: int):
@@ -380,20 +552,32 @@ class DriftServeEngine:
         skey = dataclasses.replace(mb.key, stream=preview_interval)
         fn = self.cache.get(skey, self._build_sampler)
         out = None
-        for ev in fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
-                     ctx.text, self.monitor):
-            if isinstance(ev, sampler_lib.SampleOutput):
-                out = ev
-                break               # terminating item; nothing follows
-            preview = jnp.clip(ev.latents, -1, 1)
-            for slot, req in enumerate(mb.requests):   # live slots only
-                self.stats.preview_events += 1
-                self.telemetry.on_preview()
-                yield PreviewEvent(request_id=req.request_id,
-                                   batch_index=ctx.batch_index,
-                                   step=int(ev.step),
-                                   total_steps=mb.key.steps,
-                                   latents=preview[slot])
+        store = self._offload_for(mb.key)
+        if store is not None:
+            # commits ride the preview windows: the store itself decides
+            # which window boundaries crossed a refresh step
+            store.begin_batch(interval=mb.key.rollback_interval,
+                              batch_index=ctx.batch_index)
+            self._active_offload = store
+        try:
+            for ev in fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
+                         ctx.text, self.monitor):
+                if isinstance(ev, sampler_lib.SampleOutput):
+                    out = ev
+                    break           # terminating item; nothing follows
+                preview = jnp.clip(ev.latents, -1, 1)
+                for slot, req in enumerate(mb.requests):  # live slots only
+                    self.stats.preview_events += 1
+                    self.telemetry.on_preview()
+                    yield PreviewEvent(request_id=req.request_id,
+                                       batch_index=ctx.batch_index,
+                                       step=int(ev.step),
+                                       total_steps=mb.key.steps,
+                                       latents=preview[slot])
+        finally:
+            if store is not None:
+                self._active_offload = None
+                ctx.offload_delta = store.finish_batch()
         assert out is not None, "streaming sampler ended without SampleOutput"
         yield from self._finish_batch(mb, ctx, out)
 
@@ -445,9 +629,15 @@ class DriftServeEngine:
                                        batch=key.bucket, n_live=n_live,
                                        em=em)
 
-        # advance the virtual clock by the batch's (shared) modeled latency;
-        # every request in the bucket completes at the new timestamp
-        self.clock_s += cost["latency_s"]
+        # advance the virtual clock by the batch's (shared) modeled latency
+        # -- plus, with offload enabled, the planner's residual refresh
+        # stall (the part of the host offload the next window's compute
+        # could not hide); every request completes at the new timestamp
+        stall_s = self.offload_stall_s(key.arch, key.op or "nominal",
+                                       key.steps, key.rollback_interval,
+                                       key.mode)
+        batch_latency_s = cost["latency_s"] + stall_s
+        self.clock_s += batch_latency_s
         completed_at = self.clock_s
 
         results = []
@@ -468,7 +658,7 @@ class DriftServeEngine:
                 batch_corrected_elems=corrected,
                 n_model_evals=nevals,
                 energy_j=cost["energy_j"],
-                latency_s=cost["latency_s"],
+                latency_s=batch_latency_s,
                 baseline_energy_j=base["energy_j"],
                 baseline_latency_s=base["latency_s"],
                 monitor_ber=mon_ber,
@@ -478,7 +668,7 @@ class DriftServeEngine:
                 deadline_s=req.deadline_s,
                 completed_at_s=completed_at,
                 queue_wait_s=max(
-                    completed_at - req.submitted_at_s - cost["latency_s"],
+                    completed_at - req.submitted_at_s - batch_latency_s,
                     0.0),
                 deadline_missed=missed,
             ))
@@ -487,9 +677,14 @@ class DriftServeEngine:
         # observation of the batch's realized BER / rollback intensity
         self.telemetry.on_batch(
             key=key, n_live=n_live, n_pad=mb.n_pad,
-            latency_s=cost["latency_s"], ema_ber=mon_ber, op_index=mon_idx,
+            latency_s=batch_latency_s, ema_ber=mon_ber, op_index=mon_idx,
             corrected=corrected,
             n_words=int(latents.size) * max(key.steps, 1),
             monitored=protected, clock_s=self.clock_s,
             queue_depth=len(self.queue), results=results)
+        if ctx.offload_delta is not None:
+            # settled by the drain's finish_batch() join before this ran
+            self.telemetry.on_offload(ctx.offload_delta,
+                                      interval=key.rollback_interval,
+                                      stall_s=stall_s)
         return results

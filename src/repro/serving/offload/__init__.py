@@ -1,0 +1,51 @@
+"""Asynchronous rollback-checkpoint offload for the serving stack.
+
+Sec 5.4 of the paper optimizes the rollback-ABFT checkpoint store's
+memory overhead two ways -- offloading intervals and tile-contiguous
+data layouts -- and the ROADMAP's top serving follow-on was to overlap
+the store refresh with the next denoising window instead of serializing
+it inside the scan. This package is that subsystem:
+
+===============  ======================================================
+module           role
+===============  ======================================================
+``store``        double-buffered host-side checkpoint store: snapshots
+                 the scan carry's stores at stream-window boundaries on
+                 a background thread, overlapped with the next window's
+                 compute; ``restore()`` re-uploads the last committed
+                 snapshot (restore-on-rollback)
+``layout``       routes snapshots through ``core.repack``
+                 tile-contiguous layouts and charges partial-tile
+                 recovery the ``perfmodel.dram`` repacked row count
+``planner``      per-(arch, op, steps, bucket) refresh-interval
+                 optimizer: minimizes modeled refresh energy + residual
+                 stall + detection-rate-weighted staleness penalty;
+                 resolves ``rollback_interval="auto"`` requests through
+                 ``DriftServeEngine.auto_rollback_interval``
+===============  ======================================================
+
+Wiring: ``DriftServeEngine(offload=OffloadConfig())`` (the CLIs'
+``--offload``) runs every monitored-mode batch through the windowed
+sampler with the refresh interval as the window, committing between
+windows via ``sampler.make_sampler(on_carry=...)``; the scheduler's
+batch-latency projection and the engine's virtual clock both charge the
+planner's residual stall, and telemetry gains offload counters. With
+faults disabled, offload-enabled and offload-disabled runs are
+bit-identical on both engines (asserted in tests/test_offload.py and
+tests/test_serving_sharded.py). Lifecycle + timeline: docs/offload.md.
+"""
+from repro.serving.offload.layout import (PackedLeaf, layout_report,
+                                          pack_leaf, pack_store,
+                                          recovery_rows, store_nbytes,
+                                          unpack_leaf, unpack_store)
+from repro.serving.offload.planner import (IntervalPlan, OffloadPlanner,
+                                           pareto_frontier)
+from repro.serving.offload.store import (OffloadConfig, OffloadStats,
+                                         OffloadStore)
+
+__all__ = [
+    "OffloadConfig", "OffloadStats", "OffloadStore",
+    "OffloadPlanner", "IntervalPlan", "pareto_frontier",
+    "PackedLeaf", "pack_leaf", "unpack_leaf", "pack_store", "unpack_store",
+    "store_nbytes", "recovery_rows", "layout_report",
+]

@@ -1,0 +1,159 @@
+"""Tile-contiguous host layouts for offloaded checkpoint snapshots.
+
+The offload store (``store.py``) does not ship checkpoint tensors to the
+host row-major: it routes every leaf through the Sec 5.4 tile-contiguous
+transform (``repro.core.repack``) first, so the host-side buffer has the
+same layout a Pallas BlockSpec-tiled kernel consumes and -- the part that
+matters for the paper's Fig 10(b)/13(b) claim -- a *partial* tile
+restore is charged the repacked DRAM row count from
+``repro.perfmodel.dram``, not one row activation per matrix row.
+
+Leaves are arbitrary-rank (the DiT block store stacks leaves ``(L, ...)``
+to ride the layer scan), so a leaf is first flattened to 2-D
+``(prod(leading), last_dim)``, then tiled. The pack/unpack pair is exact
+(pad -> reshape -> transpose -> crop), which is what keeps a restore
+bit-identical to the live store -- asserted against ``core.rollback``
+semantics in tests/test_offload.py, and property-tested across
+non-aligned shapes/dtypes in tests/test_repack_property.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import repack as repack_lib
+from repro.perfmodel import dram as dram_lib
+from repro.perfmodel.hw import PAPER_ACCEL
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLeaf:
+    """One checkpoint tensor in its host-side tile-contiguous form.
+
+    ``data`` is host memory (numpy): ``(Mt, Nt, tm*tn)`` when packed, the
+    raw array when the leaf was too small to tile (ndim < 2). ``sharding``
+    remembers the device placement so a restore re-uploads shard-for-shard
+    (``jax.device_put`` accepts the recorded ``NamedSharding`` unchanged).
+    """
+    data: np.ndarray
+    shape: Tuple[int, ...]            # original (unflattened) leaf shape
+    dtype: str
+    tm: int
+    tn: int
+    packed: bool
+    sharding: Optional[object] = None
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes actually offloaded (tile padding included)."""
+        return int(self.data.nbytes)
+
+
+def _flat2d(shape: Tuple[int, ...]) -> Tuple[int, int]:
+    lead = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+    return lead, int(shape[-1])
+
+
+def pack_leaf(arr: jax.Array, tm: int, tn: int,
+              repacked: bool = True) -> PackedLeaf:
+    """Snapshot one device leaf to host in tile-contiguous layout.
+
+    The repack itself runs on device (it is the free-at-kernel-boundary
+    transform of ``core.repack``); the device->host copy then pulls the
+    already-tile-contiguous buffer. On an accelerator deployment this is
+    a ``jax.device_put`` to the host CPU device overlapping the next
+    window's compute; on CPU CI the copy degenerates to a device_get of
+    the same memory space -- the semantics (an immutable host snapshot
+    decoupled from the live buffer) are identical.
+    """
+    sharding = getattr(arr, "sharding", None)
+    if arr.ndim < 2 or not repacked:
+        return PackedLeaf(data=np.asarray(arr), shape=tuple(arr.shape),
+                          dtype=str(arr.dtype), tm=tm, tn=tn, packed=False,
+                          sharding=sharding)
+    m, n = _flat2d(arr.shape)
+    tiled = repack_lib.repack(jnp.reshape(arr, (m, n)), tm, tn)
+    return PackedLeaf(data=np.asarray(tiled), shape=tuple(arr.shape),
+                      dtype=str(arr.dtype), tm=tm, tn=tn, packed=True,
+                      sharding=sharding)
+
+
+def unpack_leaf(leaf: PackedLeaf, device: bool = True):
+    """Inverse of :func:`pack_leaf`: reassemble the original leaf.
+
+    ``device=True`` re-uploads with the recorded sharding (the
+    restore-on-rollback path); ``device=False`` returns host numpy (the
+    accounting / test path).
+    """
+    if not leaf.packed:
+        out = jnp.asarray(leaf.data)
+    else:
+        m, n = _flat2d(leaf.shape)
+        flat = repack_lib.unpack(jnp.asarray(leaf.data), (m, n),
+                                 leaf.tm, leaf.tn)
+        out = jnp.reshape(flat, leaf.shape)
+    out = out.astype(leaf.dtype)
+    if not device:
+        return np.asarray(out)
+    if leaf.sharding is not None:
+        return jax.device_put(out, leaf.sharding)
+    return out
+
+
+def pack_store(stores, tm: int, tn: int, repacked: bool = True):
+    """Pack a whole checkpoint-store pytree (PackedLeaf per leaf)."""
+    return jax.tree.map(lambda a: pack_leaf(a, tm, tn, repacked), stores)
+
+
+def unpack_store(packed):
+    """Restore a packed pytree back onto device (original shardings)."""
+    return jax.tree.map(lambda l: unpack_leaf(l),
+                        packed, is_leaf=lambda x: isinstance(x, PackedLeaf))
+
+
+def store_nbytes(packed) -> int:
+    """Total host bytes of one packed snapshot (the offload volume)."""
+    return int(sum(l.nbytes for l in jax.tree.leaves(
+        packed, is_leaf=lambda x: isinstance(x, PackedLeaf))))
+
+
+def recovery_rows(leaf_shape: Tuple[int, ...], tm: int, tn: int,
+                  n_tiles: int = 1, repacked: bool = True,
+                  elem_bytes: int = 4,
+                  row_bytes: int = PAPER_ACCEL.dram_row_bytes) -> int:
+    """DRAM row activations charged for restoring ``n_tiles`` tiles of a
+    leaf -- the accounting bridge to ``perfmodel.dram``: a repacked layout
+    pays ``rows_per_tile_repacked``, a row-major one ``rows_per_tile_rowmajor``
+    with the leaf's flattened column count."""
+    _, n_cols = _flat2d(leaf_shape)
+    if repacked:
+        per_tile = dram_lib.rows_per_tile_repacked(tm, tn, elem_bytes,
+                                                   row_bytes)
+    else:
+        per_tile = dram_lib.rows_per_tile_rowmajor(tm, tn, n_cols,
+                                                   elem_bytes, row_bytes)
+    return n_tiles * per_tile
+
+
+def layout_report(stores, tm: int, tn: int) -> Dict[str, float]:
+    """Whole-store layout accounting: total tiles, row activations for a
+    full restore under both layouts, and the Fig 13(b)-style reduction."""
+    tiles = rows_rp = rows_rm = 0
+    for arr in jax.tree.leaves(stores):
+        shape = tuple(arr.shape)
+        if len(shape) < 2:
+            continue
+        m, n = _flat2d(shape)
+        n_tiles = math.ceil(m / tm) * math.ceil(n / tn)
+        tiles += n_tiles
+        rows_rp += recovery_rows(shape, tm, tn, n_tiles, repacked=True)
+        rows_rm += recovery_rows(shape, tm, tn, n_tiles, repacked=False)
+    return {"tiles": float(tiles),
+            "rows_repacked": float(rows_rp),
+            "rows_rowmajor": float(rows_rm),
+            "reduction": rows_rm / max(rows_rp, 1.0)}

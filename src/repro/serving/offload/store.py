@@ -1,0 +1,251 @@
+"""Double-buffered asynchronous rollback-checkpoint offload store.
+
+The sampler's scan refreshes the live rollback store every ``interval``
+denoising steps (``core.rollback.should_checkpoint``), and before this
+subsystem the *only* copy of that store rode the scan carry on device.
+This module adds the Sec 5.4 memory-side half of the design: at stream-
+window boundaries the engine snapshots the carry's checkpoint stores and
+offloads them to a host-side buffer on a background thread, **overlapped
+with the next window's denoising steps** -- the scan keeps carrying only
+the live buffer, while the committed snapshot lives host-side in
+tile-contiguous layout (``layout.py``). ``restore()`` re-uploads the last
+committed snapshot (restore-on-rollback / preemption recovery).
+
+Double buffering::
+
+    window k   scan ───────────────►│ window k+1 scan ──────────────►│
+                     on_window(carry)│                on_window(carry)│
+    back   ◄── snapshot+pack (thread; overlapped with window k+1)
+    front  ◄───────────────── swap when the copy completes
+    restore() reads front: always the last *committed* snapshot, never
+    a half-written one.
+
+Everything here is host-side Python running *between* jitted windows, so
+it cannot perturb the traced computation: offload-enabled and
+offload-disabled runs produce bit-identical latents (the suite asserts
+this on both engines), because the live store the scan corrects from is
+untouched -- the host copy is redundancy, exactly like a DRAM-offloaded
+checkpoint on the paper's accelerator.
+
+Commit decision & sharding: whether a window commits is decided from the
+completed-step count (did a ``step % interval == 0`` refresh land in the
+window?) and, optionally, the carry's BER-monitor state
+(``skip_spike_ratio``: a detection spike defers the commit so the last
+*good* snapshot is kept instead of being overwritten with
+possibly-corrupted activations -- the ReaLM argument). Both inputs are
+replicated on a sharded engine -- the step count is trace-static and the
+monitor's detection sums are psum-reduced across the mesh before they
+reach the carry -- so every shard takes the same decision and the
+per-shard device->host copies (``jax.device_put``-style snapshots of the
+shard-resident leaves) stay consistent without any extra collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+from repro.core.rollback import DEFAULT_INTERVAL
+from repro.serving.offload import layout as layout_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    """Knobs for the checkpoint-offload subsystem (engine-level)."""
+    enabled: bool = True
+    # Systolic-tile shape the host layout is packed in (Sec 5.4; matches
+    # the paper accelerator's 32x32 arrays and the ABFT tile granularity).
+    tile_m: int = 32
+    tile_n: int = 32
+    # Tile-contiguous host layout (core.repack). False = row-major host
+    # copies -- the Fig 10(b) ablation, charged more DRAM rows on restore.
+    repacked: bool = True
+    # Offload on a background thread, overlapped with the next window's
+    # compute. False = commit synchronously inside the window boundary --
+    # the serialized baseline benchmarks/offload_overlap.py measures.
+    async_commit: bool = True
+    # Defer (skip) a commit when the carry monitor's psum-reduced EMA BER
+    # exceeds skip_spike_ratio * target_ber: under a detection storm the
+    # activations being snapshotted are the likely-corrupted ones, so the
+    # store keeps the last good snapshot instead. None = always commit.
+    skip_spike_ratio: Optional[float] = None
+    target_ber: float = 3e-3
+
+
+@dataclasses.dataclass
+class OffloadStats:
+    """Cumulative store counters (telemetry reads per-batch deltas)."""
+    commits: int = 0
+    skipped: int = 0            # refresh windows deferred by a BER spike
+    restores: int = 0
+    bytes_offloaded: int = 0
+    waits: int = 0              # joins that actually blocked on a commit
+
+    def snapshot(self) -> "OffloadStats":
+        return dataclasses.replace(self)
+
+    def delta(self, since: "OffloadStats") -> "OffloadStats":
+        return OffloadStats(
+            commits=self.commits - since.commits,
+            skipped=self.skipped - since.skipped,
+            restores=self.restores - since.restores,
+            bytes_offloaded=self.bytes_offloaded - since.bytes_offloaded,
+            waits=self.waits - since.waits)
+
+
+class OffloadStore:
+    """Host-side double buffer for one engine's rollback checkpoints.
+
+    One store serves the whole (single-threaded) engine: ``begin_batch``
+    rebinds it to the next micro-batch's refresh interval,
+    ``on_window(done, carry)`` is the sampler-boundary tap
+    (``make_sampler(on_carry=...)``), and ``finish_batch`` joins any
+    in-flight copy so the batch's accounting is settled before results
+    are stamped. At most one copy is in flight; a new commit first joins
+    the previous one (the double buffer is two deep, not a queue).
+    """
+
+    def __init__(self, cfg: Optional[OffloadConfig] = None) -> None:
+        self.cfg = cfg or OffloadConfig()
+        self.stats = OffloadStats()
+        self._lock = threading.Lock()
+        self._front = None              # last committed packed snapshot
+        self._front_step = -1
+        self._thread: Optional[threading.Thread] = None
+        self._thread_exc: Optional[BaseException] = None
+        self._interval = DEFAULT_INTERVAL
+        self._prev_done = 0
+        self._batch_index = -1
+        self._batch_mark = self.stats.snapshot()
+
+    # ------------------------------------------------------------ binding
+    def begin_batch(self, interval: int, batch_index: int) -> None:
+        """Rebind to one micro-batch run (engine calls this per batch)."""
+        assert interval >= 1, interval
+        self.wait()                     # settle the previous batch's copy
+        self._interval = int(interval)
+        self._prev_done = 0
+        self._batch_index = batch_index
+        self._batch_mark = self.stats.snapshot()
+
+    def finish_batch(self) -> OffloadStats:
+        """Join the in-flight copy; returns this batch's stat delta."""
+        self.wait()
+        return self.stats.delta(self._batch_mark)
+
+    # ----------------------------------------------------------- the tap
+    def on_window(self, done_steps: int, carry) -> None:
+        """Sampler window-boundary hook: commit when a refresh landed.
+
+        ``carry`` is the sampling scan's carry tuple ``(latents, stores,
+        taylor, monitor, corrected, nevals)`` -- the live checkpoint
+        stores are ``carry[1]``, the psum-reduced monitor ``carry[3]``.
+        """
+        start, self._prev_done = self._prev_done, done_steps
+        refreshed = (done_steps > start
+                     and start <= self._last_refresh_step(done_steps))
+        if not refreshed:
+            return
+        if self._spiking(carry[3]):
+            with self._lock:
+                self.stats.skipped += 1
+            return
+        self.commit(self._last_refresh_step(done_steps), carry[1])
+
+    def _last_refresh_step(self, done_steps: int) -> int:
+        """Most recent step < done_steps with step % interval == 0."""
+        return ((done_steps - 1) // self._interval) * self._interval
+
+    def _spiking(self, monitor) -> bool:
+        ratio = self.cfg.skip_spike_ratio
+        if ratio is None:
+            return False
+        # float() of a replicated array: every shard holds the same
+        # psum-reduced EMA, so the skip decision is mesh-consistent.
+        return float(monitor.ema_ber) > ratio * self.cfg.target_ber
+
+    # ------------------------------------------------------------ commits
+    def commit(self, step: int, stores) -> None:
+        """Offload one snapshot of ``stores``; async when configured.
+
+        The device->host copy (repack on device, then the pull) runs on a
+        background thread so the engine's main thread is free to dispatch
+        the next window immediately -- that dispatch is what the copy
+        overlaps with.
+        """
+        self.wait()                     # double buffer: at most 1 in flight
+
+        def _do_commit() -> None:
+            # Failures on the worker thread (host OOM mid-copy, a leaf
+            # shape repack can't handle) must not be lost to the default
+            # thread excepthook while the engine keeps serving as if the
+            # offload were healthy: stash and re-raise from wait(), so
+            # the next join point (begin/finish_batch, restore) surfaces
+            # the broken recovery guarantee to the engine.
+            try:
+                packed = layout_lib.pack_store(stores, self.cfg.tile_m,
+                                               self.cfg.tile_n,
+                                               self.cfg.repacked)
+                nbytes = layout_lib.store_nbytes(packed)
+            except BaseException as exc:     # noqa: BLE001 -- re-raised
+                self._thread_exc = exc
+                return
+            with self._lock:            # atomic swap: back -> front
+                self._front = packed
+                self._front_step = step
+                self.stats.commits += 1
+                self.stats.bytes_offloaded += nbytes
+
+        if not self.cfg.async_commit:
+            _do_commit()
+            self.wait()                 # surface a sync-commit failure now
+            return
+        self._thread = threading.Thread(target=_do_commit,
+                                        name="drift-offload-commit",
+                                        daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        """Join the in-flight commit, if any; re-raises a commit failure
+        (the background thread's exception) at this join point."""
+        t, self._thread = self._thread, None
+        if t is not None and t.is_alive():
+            with self._lock:
+                self.stats.waits += 1
+            t.join()
+        elif t is not None:
+            t.join()
+        exc, self._thread_exc = self._thread_exc, None
+        if exc is not None:
+            raise RuntimeError("checkpoint offload commit failed") from exc
+
+    # ------------------------------------------------------------ queries
+    @property
+    def committed_step(self) -> int:
+        """Denoising step of the last committed snapshot (-1 = none)."""
+        with self._lock:
+            return self._front_step
+
+    @property
+    def committed_nbytes(self) -> int:
+        with self._lock:
+            return layout_lib.store_nbytes(self._front) \
+                if self._front is not None else 0
+
+    def restore(self):
+        """Re-upload the last committed snapshot to device.
+
+        The restore-on-rollback path: leaves come back bit-identical to
+        the live store they were snapshotted from (pack/unpack is exact),
+        with their recorded shardings, so ``core.rollback.correct`` run
+        against a restored checkpoint equals the inline-store path --
+        the regression tests/test_offload.py asserts.
+        """
+        self.wait()
+        with self._lock:
+            front = self._front
+        if front is None:
+            raise RuntimeError("restore() before any committed snapshot")
+        with self._lock:
+            self.stats.restores += 1
+        return layout_lib.unpack_store(front)

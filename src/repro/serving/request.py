@@ -22,9 +22,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Union
 
 from repro.core.exec_ctx import MODES
+from repro.core.rollback import DEFAULT_INTERVAL
 
 # Operating points a request may name; "auto" resolves against the engine's
 # BER-monitor ladder at batch-formation time.
@@ -49,7 +50,12 @@ class GenerationRequest:
     op: str = "undervolt"          # REQUEST_OPS member
     seed: int = 0                  # drives this request's initial latents
     taylorseer: bool = False
-    rollback_interval: int = 10
+    # Checkpoint-refresh cadence for rollback-ABFT. An int pins it;
+    # "auto" defers to the engine's offload planner, which picks the
+    # interval per (arch, op, steps, bucket) from the perfmodel and the
+    # telemetry detection history (repro.serving.offload.planner) --
+    # resolved to a concrete int at batch formation, like op="auto".
+    rollback_interval: Union[int, str] = DEFAULT_INTERVAL
     # --- scheduling contract (see serving/scheduler.py, docs/scheduler.md)
     priority: str = "standard"     # REQUEST_PRIORITIES member
     # Relative deadline in engine virtual seconds (perfmodel time) counted
@@ -80,6 +86,15 @@ class GenerationRequest:
         if self.step_budget is not None and self.step_budget < 1:
             raise ValueError(
                 f"step_budget must be >= 1, got {self.step_budget}")
+        if isinstance(self.rollback_interval, str):
+            if self.rollback_interval != "auto":
+                raise ValueError(
+                    f"rollback_interval must be an int >= 1 or 'auto', "
+                    f"got {self.rollback_interval!r}")
+        elif self.rollback_interval < 1:
+            raise ValueError(
+                f"rollback_interval must be >= 1, got "
+                f"{self.rollback_interval}")
 
     @property
     def absolute_deadline_s(self) -> Optional[float]:

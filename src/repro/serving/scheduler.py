@@ -53,6 +53,7 @@ import math
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core import dvfs as dvfs_lib
+from repro.core import rollback as rollback_lib
 from repro.perfmodel import energy
 from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
 from repro.serving.engine import OP_BY_NAME, DriftServeEngine
@@ -132,13 +133,16 @@ class PriorityMicroBatcher(MicroBatcher):
         self._urgency = urgency or (lambda r: r.request_id)
 
     def next_batch(self, queue: RequestQueue,
-                   resolve_op: Callable[[GenerationRequest], str]
+                   resolve_op: Callable[[GenerationRequest], str],
+                   resolve_interval: Optional[
+                       Callable[[GenerationRequest], int]] = None
                    ) -> MicroBatch:
         pending = queue.pending()
         assert pending, "next_batch on an empty queue"
         seed = min(pending, key=self._urgency)
-        key_of = lambda r: request_key(r, self.bucket, resolve_op(r),
-                                       self.key_extra)
+        key_of = lambda r: request_key(
+            r, self.bucket, resolve_op(r), self.key_extra,
+            resolve_interval(r) if resolve_interval is not None else None)
         key = key_of(seed)
         reqs = queue.take_matching(key, key_of, self.bucket,
                                    rank=self._urgency)
@@ -285,14 +289,16 @@ class DeadlineScheduler:
                                                      **dict(disc))
         return wait
 
-    @staticmethod
-    def _discriminators(req: GenerationRequest) -> Dict[str, object]:
+    def _discriminators(self, req: GenerationRequest) -> Dict[str, object]:
         """Learned-estimator key discriminators beyond (arch, op, steps,
         bucket): fields that change a batch's billed latency without
         changing its perfmodel admission price (the fallback deliberately
-        ignores them to stay bit-identical to the pre-telemetry path)."""
+        ignores them to stay bit-identical to the pre-telemetry path).
+        ``rollback_interval="auto"`` resolves through the engine's offload
+        planner here, so projections price the interval that will actually
+        run -- the same single-resolution contract as ``op="auto"``."""
         return {"mode": req.mode, "taylorseer": req.taylorseer,
-                "rollback_interval": req.rollback_interval}
+                "rollback_interval": self.engine.resolve_interval(req)}
 
     def batch_latency_s(self, arch: str, op_name: str, steps: int,
                         **disc) -> float:
@@ -307,7 +313,11 @@ class DeadlineScheduler:
         ``energy.run_cost`` call (full-size arch, batch = bucket) the
         engine bills results with and advances its clock by, memoized on
         operating-point *parameters* so ladder/guardband adaptation of
-        "auto" can never be served a stale projection."""
+        "auto" can never be served a stale projection. With checkpoint
+        offload enabled the perfmodel path additionally charges the
+        planner's residual refresh stall (``engine.offload_stall_s``) --
+        the same term the engine adds to its virtual clock -- while the
+        learned path already sees it inside observed batch latencies."""
         eng = self.engine
         concrete = self._concrete_op(op_name)
         bucket = eng.batcher.bucket
@@ -323,15 +333,21 @@ class DeadlineScheduler:
         key = (arch, op.voltage, op.freq_ghz, steps, bucket,
                eng.nominal_steps)
         cached = self._latency_cache.get(key)
-        if cached is not None:
-            return cached
-        rc = energy.RunConfig(num_steps=steps,
-                              nominal_steps=eng.nominal_steps,
-                              aggressive=op)
-        cost = energy.run_cost(eng._full_cfg(arch), rc, batch=bucket,
-                               em=eng._energy_model_for())
-        self._latency_cache[key] = cost["latency_s"]
-        return cost["latency_s"]
+        if cached is None:
+            rc = energy.RunConfig(num_steps=steps,
+                                  nominal_steps=eng.nominal_steps,
+                                  aggressive=op)
+            cost = energy.run_cost(eng._full_cfg(arch), rc, batch=bucket,
+                                   em=eng._energy_model_for())
+            cached = self._latency_cache[key] = cost["latency_s"]
+        # refresh stall is interval-dependent, so it stays outside the
+        # operating-point memo (the engine memoizes it per configuration);
+        # identically 0.0 on an offload-free engine -- the bit-identical
+        # pre-offload projection
+        return cached + eng.offload_stall_s(
+            arch, concrete, steps,
+            disc.get("rollback_interval", rollback_lib.DEFAULT_INTERVAL),
+            disc.get("mode", "drift"))
 
     # ---------------------------------------------------------- formation
     def _concrete_op(self, op_name: str) -> str:

@@ -96,11 +96,19 @@ class ShardedDriftServeEngine(DriftServeEngine):
 
     def _sharded_sampler_factory(self, key: SamplerKey, model_cfg, scfg,
                                  on_trace):
+        # on_carry: the checkpoint-offload tap works unchanged on the mesh
+        # -- snapshots read the shard-resident store leaves (device->host
+        # per addressable shard, shardings recorded for restore), and the
+        # commit decision consumes only replicated inputs: the trace-
+        # static step count and the monitor state, whose detection sums
+        # were already psum-reduced across the mesh. Every shard therefore
+        # agrees on every commit/skip with no extra collective.
         return sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
                                         mesh=self.mesh,
                                         stream_window=key.stream,
                                         on_window=self.telemetry
-                                        .on_stream_window)
+                                        .on_stream_window,
+                                        on_carry=self._offload_on_carry)
 
     def _params_for(self, arch: str, smoke: bool):
         k = (arch, smoke)

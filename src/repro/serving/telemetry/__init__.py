@@ -46,14 +46,16 @@ from repro.serving.telemetry.controller import (GuardbandConfig,
 from repro.serving.telemetry.history import (BatchObservation,
                                              LatencyEstimator, LatencyKey)
 from repro.serving.telemetry.metrics import (Counter, Gauge, Histogram,
-                                             MetricsRegistry)
+                                             MetricsRegistry,
+                                             merge_labeled_expositions)
 
 __all__ = [
     "EngineTelemetry",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "merge_labeled_expositions",
     "LatencyEstimator", "BatchObservation", "LatencyKey",
     "GuardbandController", "GuardbandConfig", "GuardbandStats",
-    "TelemetryHTTPServer", "serve_telemetry",
+    "TelemetryHTTPServer", "serve_telemetry", "aggregate_metrics",
 ]
 
 
@@ -163,6 +165,25 @@ class EngineTelemetry:
             "drift_projection_source_total",
             "Latency source used for admission projections",
             label_names=("source",))
+        # checkpoint-offload subsystem (repro.serving.offload)
+        self._m_off_commits = r.counter(
+            "drift_offload_commits_total",
+            "Checkpoint snapshots committed to the host offload store")
+        self._m_off_skipped = r.counter(
+            "drift_offload_skipped_total",
+            "Refresh commits deferred by a BER detection spike")
+        self._m_off_restores = r.counter(
+            "drift_offload_restores_total",
+            "Committed snapshots re-uploaded to device (rollback restore)")
+        self._m_off_bytes = r.counter(
+            "drift_offload_bytes_total",
+            "Host bytes offloaded (tile-contiguous layout, padding incl.)")
+        self._m_off_stall = r.counter(
+            "drift_offload_stall_seconds_total",
+            "Modeled residual refresh stall charged on the virtual clock")
+        self._m_off_interval = r.gauge(
+            "drift_offload_interval",
+            "Rollback refresh interval of the last offloaded batch")
         return self
 
     # -------------------------------------------------------------- hooks
@@ -223,6 +244,19 @@ class EngineTelemetry:
         if self.enabled:
             self._m_previews.inc()
 
+    def on_offload(self, delta, interval: int, stall_s: float) -> None:
+        """One offload-enabled batch's store accounting: ``delta`` is the
+        batch's ``OffloadStats`` delta (commits/skips/restores/bytes),
+        ``stall_s`` the modeled residual stall the clock was charged."""
+        if not self.enabled:
+            return
+        self._m_off_commits.inc(delta.commits)
+        self._m_off_skipped.inc(delta.skipped)
+        self._m_off_restores.inc(delta.restores)
+        self._m_off_bytes.inc(delta.bytes_offloaded)
+        self._m_off_stall.inc(stall_s)
+        self._m_off_interval.set(interval)
+
     def on_stream_window(self, done_steps: int) -> None:
         """Sampler tap: fires once per completed jitted streaming window
         (threaded through ``sampler.make_sampler(on_window=...)``)."""
@@ -260,4 +294,5 @@ class EngineTelemetry:
 # Re-exported late: http imports request types, keep the cheap modules above
 # importable without dragging the server in first.
 from repro.serving.telemetry.http import (TelemetryHTTPServer,  # noqa: E402
+                                          aggregate_metrics,
                                           serve_telemetry)

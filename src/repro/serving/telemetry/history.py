@@ -40,6 +40,7 @@ import dataclasses
 import threading
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.rollback import DEFAULT_INTERVAL
 from repro.serving.telemetry.metrics import nearest_rank
 
 # (arch, resolved operating-point name, steps, bucket, mode, taylorseer,
@@ -64,7 +65,7 @@ class BatchObservation:
     batch_index: int
     mode: str = "drift"
     taylorseer: bool = False
-    rollback_interval: int = 10
+    rollback_interval: int = DEFAULT_INTERVAL
 
     @property
     def key(self) -> LatencyKey:
@@ -123,7 +124,7 @@ class LatencyEstimator:
     @staticmethod
     def key_for(arch: str, op: str, steps: int, bucket: int,
                 mode: str = "drift", taylorseer: bool = False,
-                rollback_interval: int = 10) -> LatencyKey:
+                rollback_interval: int = DEFAULT_INTERVAL) -> LatencyKey:
         """The full latency key; the trailing discriminators default to
         ``GenerationRequest``'s defaults so plain (arch, op, steps,
         bucket) queries mean the standard drift configuration."""

@@ -74,6 +74,7 @@ from urllib.parse import parse_qs, urlparse
 import numpy as np
 
 from repro.serving.request import PreviewEvent, RequestResult
+from repro.serving.telemetry.metrics import merge_labeled_expositions
 
 
 def latents_sha256(latents) -> str:
@@ -125,9 +126,20 @@ class TelemetryHTTPServer:
 
     def __init__(self, engine, host: str = "127.0.0.1", port: int = 0,
                  preview_interval: int = 1,
-                 allowed_intervals: Tuple[int, ...] = (1, 2, 4, 8)) -> None:
+                 allowed_intervals: Tuple[int, ...] = (1, 2, 4, 8),
+                 engines: Optional[Dict[str, object]] = None) -> None:
         # accept a DeadlineScheduler transparently
         self.engine = getattr(engine, "engine", engine)
+        # Multi-engine aggregation (ROADMAP telemetry follow-on): pass
+        # ``engines={"name": engine, ...}`` and /metrics merges every
+        # engine's registry into one scrape payload with an
+        # engine="<name>" label per series (scrape-friendly family
+        # grouping -- see metrics.merge_labeled_expositions). /healthz
+        # reports a per-engine snapshot map; /events still drains only
+        # the primary ``engine``.
+        self.engines: Optional[Dict[str, object]] = (
+            {n: getattr(e, "engine", e) for n, e in engines.items()}
+            if engines else None)
         self.preview_interval = preview_interval
         # /events?interval=K values clients may request beyond the default:
         # each distinct K compiles its own streaming sampler, so the set
@@ -209,11 +221,11 @@ class TelemetryHTTPServer:
         h.wfile.write(data)
 
     # ---------------------------------------------------------- endpoints
-    def _healthz(self, h) -> None:
-        eng = self.engine
+    @staticmethod
+    def _engine_snapshot(eng) -> Dict[str, object]:
         tele = getattr(eng, "telemetry", None)
         ctrl = getattr(tele, "controller", None) if tele else None
-        body = {
+        return {
             "status": "ok",
             "arch": eng.default_arch,
             "clock_s": eng.clock_s,
@@ -225,9 +237,19 @@ class TelemetryHTTPServer:
             "guardband_index": ctrl.guard_index if ctrl else 0,
             "telemetry_enabled": bool(tele is not None and tele.enabled),
         }
+
+    def _healthz(self, h) -> None:
+        body = self._engine_snapshot(self.engine)
+        if self.engines:
+            body["engines"] = {name: self._engine_snapshot(e)
+                               for name, e in self.engines.items()}
         self._respond(h, 200, "application/json", json.dumps(body))
 
     def _metrics(self, h) -> None:
+        if self.engines:
+            self._respond(h, 200, "text/plain; version=0.0.4; charset=utf-8",
+                          aggregate_metrics(self.engines))
+            return
         tele = getattr(self.engine, "telemetry", None)
         if tele is None or not tele.enabled:
             self._respond(h, 200, "text/plain; charset=utf-8",
@@ -311,8 +333,25 @@ class TelemetryHTTPServer:
         h.wfile.flush()
 
 
-def serve_telemetry(engine, host: str = "127.0.0.1", port: int = 0
+def aggregate_metrics(engines: Dict[str, object]) -> str:
+    """One Prometheus payload for several engines, every series tagged
+    ``engine="<name>"``. Engines with telemetry disabled contribute a
+    comment only (their registry has nothing registered)."""
+    named = {}
+    for name, eng in engines.items():
+        eng = getattr(eng, "engine", eng)       # DeadlineScheduler ok
+        tele = getattr(eng, "telemetry", None)
+        named[name] = (tele.registry.expose()
+                       if tele is not None and tele.enabled else "")
+    return merge_labeled_expositions(named)
+
+
+def serve_telemetry(engine, host: str = "127.0.0.1", port: int = 0,
+                    engines: Optional[Dict[str, object]] = None
                     ) -> TelemetryHTTPServer:
     """Build + start a telemetry server for ``engine``; returns it running
-    (the CLIs print ``server.url`` and ``close()`` it after the drain)."""
-    return TelemetryHTTPServer(engine, host=host, port=port).start()
+    (the CLIs print ``server.url`` and ``close()`` it after the drain).
+    ``engines`` additionally aggregates several engines' registries under
+    one /metrics endpoint with an ``engine`` label per series."""
+    return TelemetryHTTPServer(engine, host=host, port=port,
+                               engines=engines).start()

@@ -277,3 +277,51 @@ class MetricsRegistry:
             for m in metrics:
                 lines.extend(m.expose_lines())
         return "\n".join(lines) + "\n"
+
+
+def _inject_label(sample_line: str, key: str, value: str) -> str:
+    """Prepend ``key="value"`` to one exposition sample line."""
+    body, sep, val = sample_line.rpartition(" ")
+    assert sep, f"malformed sample line: {sample_line!r}"
+    escaped = value.replace("\\", r"\\").replace('"', r"\"")
+    if "{" in body:
+        name, rest = body.split("{", 1)
+        return f'{name}{{{key}="{escaped}",{rest} {val}'
+    return f'{body}{{{key}="{escaped}"}} {val}'
+
+
+def merge_labeled_expositions(named: Dict[str, str]) -> str:
+    """Merge several registries' expositions into one scrape payload,
+    tagging every sample with an ``engine="<name>"`` label.
+
+    This is the multi-engine aggregation path: one ``/metrics`` endpoint
+    fronting several engines (``TelemetryHTTPServer(engines={...})``)
+    renders each engine's ``registry.expose()`` text and merges here.
+    The format requires every sample of a metric family to sit in one
+    contiguous block under its ``# HELP``/``# TYPE`` headers, so the
+    merge regroups by family (headers taken from the first engine that
+    exposes it) with every series' labels gaining a leading
+    ``engine="<name>"`` -- identical series from different engines never
+    collide.
+    """
+    headers: Dict[str, List[str]] = {}
+    samples: Dict[str, List[str]] = {}
+    for name in sorted(named):
+        family = None
+        for line in named[name].splitlines():
+            if not line.strip():
+                continue
+            if line.startswith("# HELP ") or line.startswith("# TYPE "):
+                family = line.split()[2]
+                fam_headers = headers.setdefault(family, [])
+                samples.setdefault(family, [])
+                if line not in fam_headers:
+                    fam_headers.append(line)
+                continue
+            assert family is not None, f"sample before headers: {line!r}"
+            samples[family].append(_inject_label(line, "engine", name))
+    out: List[str] = []
+    for family in sorted(headers):
+        out.extend(headers[family])
+        out.extend(samples[family])
+    return "\n".join(out) + "\n"

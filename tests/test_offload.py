@@ -1,0 +1,408 @@
+"""Checkpoint-offload subsystem tests (repro.serving.offload).
+
+The two acceptance bars from the PR:
+
+* with faults disabled (and enabled -- the live store is untouched either
+  way), finals are **bit-identical** between offload-enabled and
+  offload-disabled engines, one-shot ``run()`` and ``run_stream()`` both
+  (the 8-fake-device twin lives in tests/test_serving_sharded.py);
+* a rollback restored from the offloaded store produces the **same
+  corrected latents** as the inline-store path (``core.rollback``
+  semantics, through the tile-contiguous pack/unpack round trip).
+
+Plus the planner (Pareto membership, monotone pieces), the store's
+double-buffer/commit/skip machinery on synthetic carries, "auto" interval
+resolution through the engine and scheduler, the scheduler's stall-aware
+projections, and the multi-engine /metrics aggregation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import dvfs, rollback
+from repro.core.exec_ctx import DriftSystemConfig
+from repro.diffusion import sampler as sampler_lib
+from repro.diffusion.sampler import SampleOutput
+from repro.serving import (DeadlineScheduler, DriftServeEngine,
+                           OffloadConfig, OffloadPlanner, OffloadStore,
+                           PreviewEvent, TelemetryHTTPServer,
+                           aggregate_metrics)
+from repro.serving.offload import pareto_frontier
+from repro.serving.offload import store as store_mod
+
+ARCH, STEPS, BUCKET, N_REQ, INTERVAL = "dit-xl-512", 3, 2, 2, 2
+
+
+def _fake_carry(stores, ema_ber=0.0):
+    """Scan-carry shape the store's on_window tap reads: stores at [1],
+    BER-monitor state at [3]."""
+    mon = dvfs.BerMonitorState(jnp.float32(ema_ber), jnp.int32(0),
+                               jnp.int32(1))
+    return (None, stores, None, mon, None, None)
+
+
+# ------------------------------------------------------- real engine runs
+def _submit_all(eng):
+    for i in range(N_REQ):
+        eng.submit(steps=STEPS, mode="drift", op="undervolt", seed=i,
+                   rollback_interval=INTERVAL)
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Offload-disabled engine: the bit-identity reference."""
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET)
+    _submit_all(eng)
+    return eng, eng.run()
+
+
+@pytest.fixture(scope="module")
+def offloaded():
+    """Offload-enabled engine over the same stream (one-shot run())."""
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET,
+                           offload=OffloadConfig())
+    _submit_all(eng)
+    return eng, eng.run()
+
+
+@pytest.mark.slow
+def test_offload_run_bit_identical(baseline, offloaded):
+    """Acceptance bar: enabling async offload must not change one latent
+    bit -- the host store is redundancy, the live store drives every
+    correction. (Faults ARE injected here: drift mode at undervolt.)"""
+    _, ref = baseline
+    eng, res = offloaded
+    assert len(res) == N_REQ
+    for a, b in zip(ref, res):
+        assert a.request_id == b.request_id
+        assert np.array_equal(np.asarray(a.latents), np.asarray(b.latents))
+        assert a.batch_corrected_elems == b.batch_corrected_elems
+        assert a.n_model_evals == b.n_model_evals
+    # ... and the offload actually happened: ceil(3 / 2) = 2 refreshes
+    st = eng.offload_store.stats
+    assert st.commits == 2 and st.bytes_offloaded > 0
+
+
+@pytest.mark.slow
+def test_offload_run_stream_bit_identical(baseline):
+    """Same bar for the streaming path: previews + offload commits ride
+    the same windows, finals stay bit-identical to the one-shot
+    offload-free reference."""
+    _, ref = baseline
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET,
+                           offload=OffloadConfig())
+    _submit_all(eng)
+    events = list(eng.run_stream(preview_interval=1))
+    previews = [e for e in events if isinstance(e, PreviewEvent)]
+    results = sorted((e for e in events if not isinstance(e, PreviewEvent)),
+                     key=lambda r: r.request_id)
+    assert len(previews) == (STEPS - 1) * N_REQ
+    for a, b in zip(ref, results):
+        assert np.array_equal(np.asarray(a.latents), np.asarray(b.latents))
+    assert eng.offload_store.stats.commits == 2
+
+
+@pytest.mark.slow
+def test_offload_charges_stall_and_telemetry(baseline, offloaded):
+    """The modeled residual refresh stall lands on the virtual clock and
+    in the offload metric families; energy attribution is unchanged
+    (refresh DRAM traffic was already priced by ckpt_interval)."""
+    beng, bres = baseline
+    oeng, ores = offloaded
+    stall = oeng.offload_stall_s(ARCH, "undervolt", STEPS, INTERVAL)
+    assert stall >= 0.0
+    assert ores[0].latency_s == pytest.approx(bres[0].latency_s + stall)
+    assert oeng.clock_s == pytest.approx(beng.clock_s + stall)
+    assert ores[0].energy_j == pytest.approx(bres[0].energy_j)
+    reg = oeng.telemetry.registry.expose()
+    assert "drift_offload_commits_total 2" in reg
+    assert "drift_offload_interval 2" in reg
+
+
+@pytest.mark.slow
+def test_restore_matches_live_carry_stores(baseline):
+    """Drive the windowed sampler directly, snapshot the carry at every
+    window through the offload tap, and check restore() returns the live
+    stores bit-for-bit -- pack/unpack (tile-contiguous) is exact even for
+    the DiT (embed dict, stacked block dict) pytree."""
+    del baseline          # ordering only: reuse warm jax caches
+    model_cfg = configs.get_config(ARCH, smoke=True)
+    from repro.train import steps as steps_lib
+    params = steps_lib.init_model_params(model_cfg, jax.random.PRNGKey(0))
+    scfg = sampler_lib.SamplerConfig(
+        num_sample_steps=STEPS,
+        drift=DriftSystemConfig(
+            mode="drift",
+            rollback=rollback.RollbackConfig(interval=INTERVAL)))
+    lat0 = jax.random.normal(jax.random.PRNGKey(1),
+                             (1, model_cfg.latent_size,
+                              model_cfg.latent_size,
+                              model_cfg.latent_channels))
+    cond = jnp.zeros((1,), jnp.int32)
+
+    carries = []
+    store = OffloadStore(OffloadConfig(async_commit=False, tile_m=8,
+                                       tile_n=8))
+    store.begin_batch(interval=INTERVAL, batch_index=0)
+    for ev in sampler_lib.sample_stream(
+            model_cfg, params, jax.random.PRNGKey(2), lat0, cond, None,
+            scfg, window=INTERVAL,
+            on_carry=lambda done, carry: (carries.append((done, carry)),
+                                          store.on_window(done, carry))):
+        final = ev
+    assert isinstance(final, SampleOutput)
+    assert store.finish_batch().commits == 2
+    # last committed snapshot corresponds to the refresh at step 2, whose
+    # live values were visible in the carry after the window ending there
+    assert store.committed_step == 2
+    restored = store.restore()
+    live = carries[-1][1][1]             # stores of the final carry
+    live_leaves = jax.tree.leaves(live)
+    restored_leaves = jax.tree.leaves(restored)
+    assert len(live_leaves) == len(restored_leaves) > 0
+    for a, b in zip(live_leaves, restored_leaves):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------- rollback-correct regression
+def test_rollback_correct_from_restored_store_regression():
+    """core.rollback semantics: a correction masked from the restored
+    (offloaded, repacked, round-tripped) checkpoint equals the inline
+    store path bit-for-bit -- non-tile-aligned shapes included."""
+    rng = np.random.default_rng(0)
+    stores = {
+        "q_proj": jnp.asarray(rng.standard_normal((37, 19)), jnp.float32),
+        "mlp.w1": jnp.asarray(rng.standard_normal((64, 33)), jnp.float32),
+    }
+    store = OffloadStore(OffloadConfig(async_commit=False, tile_m=8,
+                                       tile_n=8))
+    store.begin_batch(interval=1, batch_index=0)
+    store.on_window(1, _fake_carry(stores))
+    restored = store.restore()
+    for name, ckpt in stores.items():
+        current = jnp.asarray(rng.standard_normal(ckpt.shape), jnp.float32)
+        mask = jnp.asarray(rng.random(ckpt.shape) < 0.2)
+        inline = rollback.correct(current, ckpt, mask, jnp.asarray(True))
+        offl = rollback.correct(current, restored[name], mask,
+                                jnp.asarray(True))
+        assert np.array_equal(np.asarray(inline), np.asarray(offl))
+        # sanity: the mask actually replaced something
+        assert np.asarray(mask).sum() > 0
+
+
+# --------------------------------------------------- store unit behavior
+def test_store_commits_only_when_refresh_crossed():
+    stores = {"w": jnp.ones((4, 4))}
+    s = OffloadStore(OffloadConfig(async_commit=False))
+    s.begin_batch(interval=4, batch_index=0)
+    s.on_window(2, _fake_carry(stores))   # refresh step 0 in [0, 2)
+    s.on_window(3, _fake_carry(stores))   # no refresh in [2, 3)
+    s.on_window(6, _fake_carry(stores))   # refresh step 4 in [3, 6)
+    assert s.stats.commits == 2
+    assert s.committed_step == 4
+
+
+def test_store_skips_commit_on_detection_spike():
+    stores = {"w": jnp.ones((4, 4))}
+    s = OffloadStore(OffloadConfig(async_commit=False, skip_spike_ratio=2.0,
+                                   target_ber=1e-3))
+    s.begin_batch(interval=1, batch_index=0)
+    s.on_window(1, _fake_carry(stores, ema_ber=0.0))       # quiet: commit
+    s.on_window(2, _fake_carry(stores, ema_ber=5e-3))      # spike: keep old
+    st = s.finish_batch()
+    assert st.commits == 1 and st.skipped == 1
+    assert s.committed_step == 0          # the pre-spike snapshot survives
+
+
+def test_store_async_commit_is_joined_and_restores():
+    stores = {"w": jnp.arange(16.0).reshape(4, 4)}
+    s = OffloadStore(OffloadConfig())     # async
+    s.begin_batch(interval=1, batch_index=0)
+    s.on_window(1, _fake_carry(stores))
+    delta = s.finish_batch()              # joins the background thread
+    assert delta.commits == 1 and delta.bytes_offloaded > 0
+    r = s.restore()
+    assert np.array_equal(np.asarray(r["w"]), np.asarray(stores["w"]))
+    with pytest.raises(RuntimeError):
+        OffloadStore().restore()          # nothing committed yet
+
+
+def test_store_surfaces_background_commit_failure():
+    """A failed pack/copy on the worker thread must not leave the engine
+    believing the offload is healthy: the next join point re-raises."""
+    s = OffloadStore(OffloadConfig())
+    s.begin_batch(interval=1, batch_index=0)
+    s.on_window(1, _fake_carry({"w": object()}))   # unpackable leaf
+    with pytest.raises(RuntimeError, match="offload commit failed"):
+        s.finish_batch()
+    # the store recovers: a later good commit goes through
+    s.begin_batch(interval=1, batch_index=1)
+    s.on_window(1, _fake_carry({"w": jnp.ones((4, 4))}))
+    assert s.finish_batch().commits == 1
+
+
+def test_row_major_layout_costs_more_recovery_rows():
+    from repro.serving.offload import recovery_rows
+    shape = (256, 1152)
+    rp = recovery_rows(shape, 32, 32, n_tiles=4, repacked=True)
+    rm = recovery_rows(shape, 32, 32, n_tiles=4, repacked=False)
+    assert rp < rm                        # the Fig 10(b) gap
+
+
+# -------------------------------------------------------------- planner
+def test_planner_chosen_interval_on_pareto_frontier():
+    cfg = configs.get_config(ARCH)
+    planner = OffloadPlanner()
+    for rate in (1e-4, 0.3, 1.0):
+        plans = planner.sweep(cfg, dvfs.UNDERVOLT, 50, 2, detect_rate=rate)
+        chosen = planner.plan(cfg, dvfs.UNDERVOLT, 50, 2, detect_rate=rate)
+        frontier = pareto_frontier(plans)
+        assert any(p.interval == chosen.interval for p in frontier)
+        # overlap strictly beats serialization whenever there is any
+        # compute to hide behind
+        assert all(p.stall_s < p.stall_serialized_s for p in plans)
+    # refresh energy falls and staleness penalty rises with the interval
+    plans = planner.sweep(cfg, dvfs.UNDERVOLT, 50, 2, detect_rate=1.0)
+    by_interval = sorted(plans, key=lambda p: p.interval)
+    for a, b in zip(by_interval, by_interval[1:]):
+        assert b.refresh_energy_j <= a.refresh_energy_j
+        assert b.rollback_penalty_j >= a.rollback_penalty_j
+
+
+def test_planner_low_detection_rate_prefers_longer_intervals():
+    """With nothing to roll back, refreshing often is pure waste."""
+    cfg = configs.get_config(ARCH)
+    planner = OffloadPlanner()
+    quiet = planner.plan(cfg, dvfs.UNDERVOLT, 50, 2, detect_rate=1e-6)
+    noisy = planner.plan(cfg, dvfs.UNDERVOLT, 50, 2, detect_rate=1.0)
+    assert quiet.interval >= noisy.interval
+
+
+# ------------------------------------------------ auto-interval plumbing
+def fake_factory():
+    """Trace-free sampler factory; yields like the windowed path when the
+    key asks for streaming so the offload drain works against it."""
+    def factory(key, model_cfg, scfg, on_trace):
+        on_trace()
+
+        def run(params, rng, latents, cond, text, monitor0):
+            out = SampleOutput(latents, monitor0, jnp.int32(0),
+                               jnp.int32(scfg.num_sample_steps))
+            if key.stream:
+                def gen():
+                    yield out
+                return gen()
+            return out
+        return run
+    return factory
+
+
+def _fake_engine(**kw):
+    return DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET,
+                            sampler_factory=fake_factory(), **kw)
+
+
+def test_auto_rollback_interval_resolves_once_per_config():
+    eng = _fake_engine()
+    for i in range(2):
+        eng.submit(steps=4, mode="drift", op="undervolt", seed=i,
+                   rollback_interval="auto")
+    results = eng.run()
+    assert len(results) == 2
+    assert eng.stats.batches == 1         # both resolved identically
+    planned = eng.auto_rollback_interval(ARCH, "undervolt", 4)
+    assert isinstance(planned, int) and planned >= 1
+    # memoized per (config, quantized detection rate): re-resolving at the
+    # same telemetry state adds no entries -- but the key does carry the
+    # rate, so adaptation CAN move the choice later
+    n_memo = len(eng._interval_memo)
+    assert eng.auto_rollback_interval(ARCH, "undervolt", 4) == planned
+    assert len(eng._interval_memo) == n_memo
+
+
+def test_auto_interval_lands_in_sampler_key():
+    eng = _fake_engine()
+    eng.submit(steps=4, mode="drift", op="undervolt", seed=0,
+               rollback_interval="auto")
+    mb = eng.batcher.next_batch(eng.queue, eng._resolve_op,
+                                eng._resolve_interval)
+    assert isinstance(mb.key.rollback_interval, int)
+    assert mb.key.rollback_interval == \
+        eng.auto_rollback_interval(ARCH, "undervolt", 4)
+
+
+def test_request_validates_rollback_interval():
+    eng = _fake_engine()
+    with pytest.raises(ValueError):
+        eng.submit(steps=4, mode="drift", op="undervolt", seed=0,
+                   rollback_interval="sometimes")
+    with pytest.raises(ValueError):
+        eng.submit(steps=4, mode="drift", op="undervolt", seed=0,
+                   rollback_interval=0)
+
+
+def test_scheduler_prices_auto_interval_and_stall():
+    """Admission must price (a) the planner-resolved interval in the
+    learned-estimator key and (b) the offload residual stall in the
+    perfmodel projection -- and an offload-free engine must project
+    bit-identically to the pre-offload scheduler."""
+    plain = DeadlineScheduler(_fake_engine())
+    offl = DeadlineScheduler(_fake_engine(offload=OffloadConfig()))
+    base = plain.batch_latency_s(ARCH, "undervolt", STEPS,
+                                 rollback_interval=1)
+    with_stall = offl.batch_latency_s(ARCH, "undervolt", STEPS,
+                                      rollback_interval=1)
+    stall = offl.engine.offload_stall_s(ARCH, "undervolt", STEPS, 1)
+    assert with_stall == pytest.approx(base + stall)
+    assert plain.engine.offload_stall_s(ARCH, "undervolt", STEPS, 1) == 0.0
+    # "auto" interval resolves through the engine for discriminators
+    adm = offl.submit(steps=STEPS, mode="drift", op="undervolt", seed=0,
+                      rollback_interval="auto", deadline_s=1e9)
+    assert adm.admitted
+
+
+# ------------------------------------------- multi-engine /metrics wire
+def test_aggregate_metrics_labels_every_series():
+    engines = {}
+    for name in ("a", "b"):
+        eng = _fake_engine()
+        eng.submit(steps=2, mode="drift", op="undervolt", seed=0)
+        eng.run()
+        engines[name] = eng
+    text = aggregate_metrics(engines)
+    for line in text.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        assert 'engine="a"' in line or 'engine="b"' in line, line
+    # families appear once, grouped (scrape-friendly): HELP precedes all
+    # of a family's samples
+    helps = [l for l in text.splitlines()
+             if l.startswith("# HELP drift_batches_total")]
+    assert len(helps) == 1
+    assert 'drift_batches_total{engine="a",mode="drift",op="undervolt"} 1' \
+        in text
+    assert 'drift_batches_total{engine="b",mode="drift",op="undervolt"} 1' \
+        in text
+
+
+def test_http_metrics_endpoint_aggregates_engines():
+    import urllib.request
+    a, b = _fake_engine(), _fake_engine()
+    for eng in (a, b):
+        eng.submit(steps=2, mode="drift", op="undervolt", seed=0)
+        eng.run()
+    with TelemetryHTTPServer(a, engines={"left": a, "right": b}) as srv:
+        with urllib.request.urlopen(f"{srv.url}/metrics", timeout=10) as r:
+            payload = r.read().decode()
+        with urllib.request.urlopen(f"{srv.url}/healthz", timeout=10) as r:
+            import json
+            health = json.loads(r.read().decode())
+    assert 'engine="left"' in payload and 'engine="right"' in payload
+    assert set(health["engines"]) == {"left", "right"}
+    assert health["engines"]["left"]["batches"] == 1
+    assert health["engines"]["right"]["batches"] == 1

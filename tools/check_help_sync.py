@@ -7,7 +7,11 @@ Checks, for both ``python -m repro.launch.serve`` and
 * every operating point in ``core.dvfs.OP_LADDER`` is named in the help
   text (the CLIs derive it from the ladder programmatically -- this guard
   catches someone replacing that with a stale literal);
-* every scheduling/streaming flag the docs advertise is present.
+* every scheduling/streaming/offload flag the docs advertise is present;
+* the ``--rollback-interval`` help renders its default from
+  ``core.rollback.DEFAULT_INTERVAL`` (the single source of truth -- the
+  old CLIs duplicated the literal 10 in help strings, which is exactly
+  the drift this script exists to catch).
 
 Run from the repo root (CI does: the docs job in
 .github/workflows/ci.yml):
@@ -19,6 +23,7 @@ import sys
 
 sys.path.insert(0, "src")
 from repro.core.dvfs import OP_LADDER  # noqa: E402
+from repro.core.rollback import DEFAULT_INTERVAL  # noqa: E402
 
 CLIS = (
     [sys.executable, "-m", "repro.launch.serve", "--help"],
@@ -26,7 +31,11 @@ CLIS = (
 )
 REQUIRED_FLAGS = ("--op", "--priority", "--deadline", "--step-budget",
                   "--stream", "--batch", "--steps",
-                  "--metrics-port", "--no-telemetry")
+                  "--metrics-port", "--no-telemetry",
+                  "--rollback-interval", "--offload")
+# The rendered interval default must come from the one constant (a CLI
+# hard-coding the number would go stale the day the constant moves).
+INTERVAL_DEFAULT_TEXT = f"default: {DEFAULT_INTERVAL},"
 
 
 def main() -> int:
@@ -36,11 +45,15 @@ def main() -> int:
                              check=True).stdout
         missing = [p.name for p in OP_LADDER if p.name not in out]
         missing += [f for f in REQUIRED_FLAGS if f not in out]
+        if INTERVAL_DEFAULT_TEXT not in out:
+            missing.append(f"'{INTERVAL_DEFAULT_TEXT}' (rollback-interval "
+                           "default derived from rollback.DEFAULT_INTERVAL)")
         if missing:
             failures.append((cmd, missing))
         else:
-            print(f"ok: {' '.join(cmd[-2:])} help names the full ladder "
-                  f"and all scheduler flags")
+            print(f"ok: {' '.join(cmd[-2:])} help names the full ladder, "
+                  f"all scheduler/offload flags, and the "
+                  f"DEFAULT_INTERVAL-derived default")
     for cmd, missing in failures:
         print(f"FAIL {' '.join(cmd)}: --help missing {missing}",
               file=sys.stderr)
