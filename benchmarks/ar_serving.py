@@ -1,0 +1,98 @@
+"""Autoregressive-serving benchmark: the second paradigm's perf baseline.
+
+Drives identical token-decoding request streams through the shared
+serving engine twice -- once with statistical ABFT + KV-window rollback
+(``mode=stat_abft``) and once with the same fault injection but no
+protection (``mode=faulty``) -- and emits ``BENCH_ar.json``:
+
+* **throughput** -- generated tokens per virtual (modeled-accelerator)
+  second and per host wall second, for the protected run (wall numbers
+  are a CPU-smoke artifact; virtual numbers are the deterministic ones
+  future PRs must not regress);
+* **detection rate** -- statistical-ABFT flagged rows per monitored
+  decode step and per protected GEMM word, plus KV rollbacks per
+  request;
+* **rollback overhead** -- what protection costs relative to ABFT off:
+  the model-eval ratio (replayed windows charged as extra evals) and the
+  virtual-latency ratio between the two runs;
+* **quality** -- token match vs the clean reference for both runs: the
+  protected stream must match exactly (rollback replays every flagged
+  window); the unprotected stream documents what the same fault rate
+  does without detection.
+
+Run from the repo root:
+
+    PYTHONPATH=src python -m benchmarks.ar_serving
+
+Also registered in ``benchmarks.run``. Output lands in ./BENCH_ar.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.serving import DriftServeEngine
+
+ARCH, STEPS, BUCKET, N_REQ = "olmo-1b", 8, 2, 4
+OP = "undervolt"
+
+
+def _run(mode: str):
+    engine = DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET)
+    for i in range(N_REQ):
+        engine.submit(arch=ARCH, steps=STEPS, mode=mode, op=OP, seed=i)
+    t0 = time.time()
+    results = engine.run()
+    return engine, results, time.time() - t0
+
+
+def main() -> None:
+    eng_p, protected, wall_p = _run("stat_abft")
+    eng_u, unprotected, wall_u = _run("faulty")
+
+    tokens = sum(len(r.tokens) for r in protected)
+    detections = sum(r.ar_detections for r in protected)
+    rollbacks = sum(r.ar_rollbacks for r in protected)
+    evals_p = sum(r.n_model_evals for r in protected)
+    evals_u = sum(r.n_model_evals for r in unprotected)
+    # every request decodes steps-1 monitored tokens after the prefill
+    monitored_steps = N_REQ * (STEPS - 1)
+
+    bench = {
+        "arch": ARCH, "steps": STEPS, "requests": N_REQ, "op": OP,
+        "tokens": tokens,
+        "virtual_s": eng_p.clock_s,
+        "wall_s": wall_p,
+        "tokens_per_virtual_s": tokens / eng_p.clock_s,
+        "tokens_per_wall_s": tokens / max(wall_p, 1e-9),
+        "detection": {
+            "flagged_rows": detections,
+            "per_monitored_step": detections / monitored_steps,
+            "rollbacks": rollbacks,
+            "rollbacks_per_request": rollbacks / N_REQ,
+            "monitor_ema_ber": float(eng_p.monitor.ema_ber),
+        },
+        "rollback_overhead": {
+            "model_evals_protected": evals_p,
+            "model_evals_unprotected": evals_u,
+            "eval_ratio": evals_p / evals_u,
+            "virtual_s_unprotected": eng_u.clock_s,
+            "latency_ratio": eng_p.clock_s / eng_u.clock_s,
+        },
+        "quality": {
+            "token_match_protected": min(
+                r.token_match_vs_clean for r in protected),
+            "token_match_unprotected": min(
+                r.token_match_vs_clean for r in unprotected),
+        },
+    }
+    assert bench["quality"]["token_match_protected"] == 1.0, (
+        "protected decode diverged from the clean reference")
+    with open("BENCH_ar.json", "w", encoding="utf-8") as fh:
+        json.dump(bench, fh, indent=2, sort_keys=True)
+    print(json.dumps(bench, indent=2, sort_keys=True))
+    print(f"unprotected wall {wall_u:.1f}s; wrote BENCH_ar.json")
+
+
+if __name__ == "__main__":
+    main()

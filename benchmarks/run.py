@@ -24,6 +24,7 @@ MODULES = [
     "table2_taylorseer",
     "roofline_summary",
     "serving_telemetry",
+    "ar_serving",
     "offload_overlap",
 ]
 

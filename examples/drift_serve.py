@@ -1,5 +1,13 @@
-"""Serve a stream of diffusion requests with mixed DVFS operating points,
+"""Serve a stream of generation requests with mixed DVFS operating points,
 priorities, and deadlines through one DRIFT serving engine.
+
+``--arch`` picks any registered model: diffusion archs run the DRIFT
+denoiser (mode ``drift``), autoregressive archs run token decoding with
+statistical ABFT + KV-window rollback (mode ``stat_abft``) -- same
+engine, queue, DVFS ladder, and monitor either way (docs/servable.md):
+
+    PYTHONPATH=src python examples/drift_serve.py --arch olmo-1b \
+        --requests 2 --batch 2 --steps 8
 
 Each request picks its own operating point (``--op`` is a comma-separated
 list cycled across requests; ``auto`` defers to the engine's BER-monitor
@@ -48,11 +56,12 @@ import contextlib
 
 from repro.core import dvfs as dvfs_lib
 from repro.core.rollback import DEFAULT_INTERVAL
-from repro.launch.serve import rollback_interval_arg
+from repro.launch.serve import (arch_family_help, default_mode_for,
+                                rollback_interval_arg)
 from repro.serving import (DeadlineScheduler, DriftServeEngine,
                            EngineTelemetry, OffloadConfig, PreviewEvent,
                            ShardedDriftServeEngine, make_engine,
-                           serve_telemetry)
+                           paradigm_for, serve_telemetry)
 from repro.serving.request import REQUEST_PRIORITIES
 
 OP_LADDER_HELP = " -> ".join(p.name for p in dvfs_lib.OP_LADDER)
@@ -63,6 +72,9 @@ def build_parser():
         description="Mixed-op / mixed-priority DRIFT serving demo.",
         epilog=f"The op 'auto' walks core.dvfs.OP_LADDER "
                f"({OP_LADDER_HELP}) via the engine's BER monitor.")
+    ap.add_argument("--arch", default="dit-xl-512",
+                    help="model to serve; paradigm comes from the "
+                         f"ServableModel registry -- {arch_family_help()}")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--steps", type=int, default=10)
@@ -119,17 +131,21 @@ def main():
     if not ops or not priorities or not deadlines:
         raise SystemExit("--op/--priority/--deadline need at least one "
                          "non-empty entry")
+    if args.stream and paradigm_for(args.arch) != "diffusion":
+        raise SystemExit("--stream previews are latent images; "
+                         f"{args.arch} serves autoregressively (tokens "
+                         "come back in the final results)")
     telemetry = EngineTelemetry(enabled=not args.no_telemetry)
     offload = OffloadConfig() if args.offload else None
     if args.sharded:
-        engine = make_engine(arch="dit-xl-512", smoke=True,
+        engine = make_engine(arch=args.arch, smoke=True,
                              bucket=args.batch,
                              model_parallel=args.model_parallel,
                              telemetry=telemetry, offload=offload)
     else:
         if args.model_parallel != 1:
             raise SystemExit("--model-parallel requires --sharded")
-        engine = DriftServeEngine(arch="dit-xl-512", smoke=True,
+        engine = DriftServeEngine(arch=args.arch, smoke=True,
                                   bucket=args.batch, telemetry=telemetry,
                                   offload=offload)
     server = None
@@ -156,9 +172,10 @@ def _drive(args, engine, server, ops, priorities, deadlines):
     # batches -- or draining the queue we just filled.
     drain_lock = server.engine_lock if server is not None \
         else contextlib.nullcontext()
+    mode = default_mode_for(args.arch)
     with drain_lock:
         for i in range(args.requests):
-            fields = dict(steps=args.steps, mode="drift",
+            fields = dict(arch=args.arch, steps=args.steps, mode=mode,
                           op=ops[i % len(ops)], seed=i,
                           rollback_interval=args.rollback_interval)
             if sched is not None:
@@ -191,23 +208,35 @@ def _drive(args, engine, server, ops, priorities, deadlines):
 
     for r in results:
         miss = " MISSED-DEADLINE" if r.deadline_missed else ""
+        if r.tokens is not None:
+            quality = (f"{len(r.tokens)} tokens "
+                       f"match-vs-clean {r.token_match_vs_clean:.3f} "
+                       f"abft-detections {r.ar_detections} "
+                       f"kv-rollbacks {r.ar_rollbacks} "
+                       f"evals {r.n_model_evals}")
+        else:
+            quality = (f"lpips={r.lpips_vs_clean:.4f} "
+                       f"psnr={r.psnr_vs_clean_db:.1f}dB "
+                       f"corrected(batch)={r.batch_corrected_elems}")
         print(f"req {r.request_id}: op={r.op} steps={r.steps} "
-              f"prio={r.priority} batch={r.batch_index} "
-              f"lpips={r.lpips_vs_clean:.4f} psnr={r.psnr_vs_clean_db:.1f}dB "
-              f"corrected(batch)={r.batch_corrected_elems} "
+              f"prio={r.priority} batch={r.batch_index} {quality} "
               f"energy={r.energy_j:.2f}J (baseline {r.baseline_energy_j:.2f}J) "
               f"monitor_ber={r.monitor_ber:.2e}{miss}")
 
     distinct = len({(r.op, r.mode, r.steps) for r in results})
-    # one-shot: one trace per distinct config; streamed OR offloaded
-    # (offload runs the windowed sampler with the refresh interval as the
-    # window): a window plus possibly a remainder window per config -> at
-    # most two traces per distinct config. Clean references are keyed by
-    # step count (the scheduler may trim steps per request), one one-shot
-    # trace each.
-    per_config = 2 if (args.stream or args.offload) else 1
+    # Diffusion one-shot: one trace per distinct config; streamed OR
+    # offloaded (offload runs the windowed sampler with the refresh
+    # interval as the window): a window plus possibly a remainder window
+    # per config -> at most two traces per distinct config. Clean
+    # references are keyed by step count (the scheduler may trim steps per
+    # request), one one-shot trace each. Autoregressive configs compile
+    # exactly two functions (prefill + decode step) -- both the served
+    # config and its clean reference.
+    ar = paradigm_for(args.arch) == "autoregressive"
+    per_config = 2 if (ar or args.stream or args.offload) else 1
+    per_clean = 2 if ar else 1
     clean_configs = len({r.steps for r in results})
-    expected_traces = distinct * per_config + clean_configs
+    expected_traces = distinct * per_config + clean_configs * per_clean
     print(f"engine: {engine.stats.batches} batches, {engine.cache.traces} "
           f"traces for {distinct} drift configs (+{clean_configs} clean), "
           f"{engine.cache.hits} cache hits; clock {engine.clock_s:.3f}s, "

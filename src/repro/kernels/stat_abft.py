@@ -1,0 +1,124 @@
+"""Statistical ABFT for float GEMMs (ReaLM-style) + quantized backend.
+
+The classic ABFT checksum test (``kernels/abft_matmul.py``) is exact: the
+INT32 row/column sums of the quantized GEMM either match or they don't.
+Float GEMMs break that -- the checksum lane accumulates in a different
+order than the MXU tiles, so the residual
+
+    r_i = sum_j y[i, j]  -  x_i . (W @ 1)
+
+is nonzero even for a fault-free multiply, with magnitude set by the
+rounding noise of the accumulation. ReaLM's observation (PAPERS.md) is
+that this is a feature, not a bug: LLM decoding tolerates small numerical
+perturbations, so detection only needs to fire for faults whose magnitude
+*exceeds* the rounding envelope -- a **statistical** threshold calibrated
+from the operands, not an exact test.
+
+This module provides:
+
+  * ``threshold(x, w)`` -- per-row detection threshold
+    ``tau_i = alpha * eps * K * (|x_i| . rowsum|W|) + floor``: the standard
+    forward-error envelope ``gamma_K * |x||W|`` of K-term accumulation,
+    with ``eps`` the unit roundoff of the *accumulation* dtype and
+    ``alpha`` a safety factor soaking up order-of-summation variance.
+  * ``residuals(x, w, y)`` -- checksum residual of a (possibly faulty)
+    product ``y`` against the rank-1 checksum of ``(x, w)``.
+  * ``detect(x, w, y)`` -- per-row boolean ``|r_i| > tau_i``. A single
+    bit flip of magnitude ``delta`` in ``y`` shifts exactly one residual
+    by ``delta``, so flips above the envelope (exponent / high-mantissa
+    bits -- the ones that damage decoding) are caught and low-mantissa
+    noise sails through undetected, by design.
+  * ``stat_abft_matmul(aq, bq, flips, threshold_mag)`` -- the quantized
+    backend: wraps the fused Pallas ``abft_matmul`` kernel and applies the
+    same magnitude-thresholding to its INT32 row-checksum residuals, for
+    callers already on the int8 path (tile-aligned shapes only; the float
+    path above is what the decode loop uses, since (batch, 1, d) decode
+    GEMMs never tile-align).
+
+All checksum math runs in float32 regardless of the operand dtype; the
+threshold uses the coarser of the operand dtypes' unit roundoffs, so bf16
+inputs get a bf16-sized envelope.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: safety factor on the rounding envelope: the gamma_K bound assumes
+#: worst-case error alignment PER TERM but we compare one summed residual;
+#: 4x absorbs order-of-summation variance across backends at a measured
+#: false-positive rate of ~0 (tests/test_stat_abft.py pins this).
+ALPHA = 4.0
+
+#: absolute floor so all-zero (or denormal) rows don't get tau == 0 and
+#: flag their own rounding dust.
+TAU_FLOOR = 1e-6
+
+
+def unit_roundoff(dtype) -> float:
+    """Unit roundoff of a float dtype (bf16: 2^-9, f32: 2^-24, ...)."""
+    return float(jnp.finfo(jnp.dtype(dtype)).eps) / 2.0
+
+
+def _eps_for(x: jax.Array, w: jax.Array) -> float:
+    return max(unit_roundoff(x.dtype), unit_roundoff(w.dtype))
+
+
+def threshold(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-row detection threshold tau, shape = x.shape[:-1].
+
+    x: (..., K) activations, w: (K, N) weights.
+    """
+    k = x.shape[-1]
+    eps = _eps_for(x, w)
+    absw_rowsum = jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=-1)  # (K,)
+    envelope = jnp.abs(x.astype(jnp.float32)) @ absw_rowsum         # (...,)
+    return ALPHA * eps * float(k) * envelope + TAU_FLOOR
+
+
+def residuals(x: jax.Array, w: jax.Array, y: jax.Array) -> jax.Array:
+    """Checksum residual r_i = sum_j y_ij - x_i . (W @ 1), shape (...,)."""
+    w_colsum = jnp.sum(w.astype(jnp.float32), axis=-1)              # (K,)
+    expected = x.astype(jnp.float32) @ w_colsum                     # (...,)
+    actual = jnp.sum(y.astype(jnp.float32), axis=-1)                # (...,)
+    return actual - expected
+
+
+def detect(x: jax.Array, w: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-row fault flags: |residual| above the statistical threshold."""
+    return jnp.abs(residuals(x, w, y)) > threshold(x, w)
+
+
+def min_detectable_magnitude(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Smallest per-row |delta| a single corrupted element must carry to be
+    detected no matter where the clean residual sits inside the envelope:
+    delta > 2*tau (the clean residual can sit at -tau while the threshold
+    test needs |r + delta| > tau). Used by the property tests to pick
+    provably-detectable injections."""
+    return 2.0 * threshold(x, w)
+
+
+def stat_abft_matmul(aq: jax.Array, bq: jax.Array, flips: jax.Array,
+                     threshold_mag: int,
+                     bm: int = 128, bn: int = 128, bk: int = 128,
+                     interpret: bool = False
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized statistical ABFT via the fused Pallas checksum kernel.
+
+    Runs ``kernels.abft_matmul.abft_matmul`` (int8 GEMM + fused faulty
+    row/col checksums) and flags row-tiles whose INT32 row-checksum
+    residual magnitude exceeds ``threshold_mag`` -- the integer analogue
+    of the float envelope: exact ABFT is ``threshold_mag == 0``; a
+    positive threshold ignores low-bit flips the quantized network
+    tolerates anyway (ReaLM's magnitude cutoff).
+
+    Returns ``(c_faulty (M, N) int32, detected_rows (M, n_tiles) bool)``.
+    Shapes must tile-align (M % bm == N % bn == K % bk == 0).
+    """
+    from repro.kernels.abft_matmul import abft_matmul
+    c_faulty, act_row, exp_row, _, _ = abft_matmul(
+        aq, bq, flips, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    resid = jnp.abs(act_row - exp_row)
+    return c_faulty, resid > jnp.int32(threshold_mag)

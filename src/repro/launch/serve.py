@@ -48,6 +48,7 @@ import contextlib
 import time
 from typing import Optional, Sequence
 
+from repro import configs
 from repro.core import dvfs as dvfs_lib
 from repro.core.rollback import DEFAULT_INTERVAL
 from repro.serving import (DeadlineScheduler, DriftServeEngine,
@@ -55,10 +56,37 @@ from repro.serving import (DeadlineScheduler, DriftServeEngine,
                            ShardedDriftServeEngine, make_engine,
                            serve_telemetry)
 from repro.serving.request import REQUEST_OPS, REQUEST_PRIORITIES
+from repro.serving.servable import PARADIGM_BY_FAMILY, paradigm_for
 
 # Derived from code so --help can never drift out of sync with the ladder
 # (tools/check_help_sync.py asserts every name appears in the help text).
 OP_LADDER_HELP = " -> ".join(p.name for p in dvfs_lib.OP_LADDER)
+
+
+def arch_family_help() -> str:
+    """--arch help text derived from the ServableModel registry: every
+    known arch grouped by serving paradigm, unsupported ones named.
+    tools/check_help_sync.py asserts all of it shows up in --help."""
+    by_paradigm = {}
+    unsupported = []
+    for arch in configs.list_archs():
+        fam = configs.get_config(arch).family
+        paradigm = PARADIGM_BY_FAMILY.get(fam)
+        if paradigm is None:
+            unsupported.append(arch)
+        else:
+            by_paradigm.setdefault(paradigm, []).append(arch)
+    parts = [f"{p}: {', '.join(archs)}"
+             for p, archs in sorted(by_paradigm.items())]
+    parts.append(f"unsupported: {', '.join(unsupported)}")
+    return "; ".join(parts)
+
+
+def default_mode_for(arch: str) -> str:
+    """Paradigm-appropriate default when --mode is omitted: the DRIFT
+    denoiser protection for diffusion archs, statistical ABFT with
+    KV-window rollback for autoregressive ones."""
+    return "drift" if paradigm_for(arch) == "diffusion" else "stat_abft"
 
 
 def rollback_interval_arg(value: str):
@@ -82,16 +110,24 @@ def build_parser() -> argparse.ArgumentParser:
                f"{OP_LADDER_HELP}. Scheduling (--priority/--deadline/"
                f"--step-budget) and streaming (--stream) are documented in "
                f"docs/scheduler.md.")
-    ap.add_argument("--arch", default="dit-xl-512")
+    ap.add_argument("--arch", default="dit-xl-512",
+                    help="model to serve; the engine picks the paradigm "
+                         "from the ServableModel registry -- "
+                         f"{arch_family_help()}")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=2,
                     help="micro-batch bucket size")
     ap.add_argument("--requests", type=int, default=0,
                     help="requests to submit (0 = one bucket's worth)")
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--mode", default="drift",
+    ap.add_argument("--steps", type=int, default=10,
+                    help="denoising steps (diffusion) or tokens to decode "
+                         "(autoregressive)")
+    ap.add_argument("--mode", default=None,
                     choices=["clean", "faulty", "drift", "thundervolt",
-                             "approx_abft", "dmr", "stat_abft"])
+                             "approx_abft", "dmr", "stat_abft"],
+                    help="protection mode (default: 'drift' for diffusion "
+                         "archs, 'stat_abft' for autoregressive ones; AR "
+                         "serving accepts clean/faulty/stat_abft only)")
     ap.add_argument("--op", default="undervolt", choices=list(REQUEST_OPS),
                     help="DVFS operating point; 'auto' walks the BER-monitor "
                          f"ladder core.dvfs.OP_LADDER ({OP_LADDER_HELP})")
@@ -189,8 +225,9 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
                      or args.priority != "standard"
                      or args.step_budget is not None)
     sched = DeadlineScheduler(eng) if use_scheduler else None
+    mode = args.mode if args.mode is not None else default_mode_for(args.arch)
     fields = dict(arch=args.arch, smoke=args.smoke, steps=args.steps,
-                  mode=args.mode, op=args.op, taylorseer=args.taylorseer,
+                  mode=mode, op=args.op, taylorseer=args.taylorseer,
                   rollback_interval=args.rollback_interval)
     # Hold the server's engine lock from first submission through the
     # drain: a concurrent /events client gets a clean 503 instead of
@@ -226,18 +263,26 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
             results = eng.run()
     wall = time.time() - t0
 
-    print(f"[serve] {args.arch} mode={args.mode} op={args.op} "
+    print(f"[serve] {args.arch} mode={mode} op={args.op} "
           f"steps={args.steps} requests={n_requests} bucket={bucket} "
           f"wall={wall:.1f}s"
           + (f" previews={previews}" if args.stream else ""))
     for r in results:
         miss = "  DEADLINE MISSED" if r.deadline_missed else ""
-        print(f"  req {r.request_id} (batch {r.batch_index}, op {r.op}, "
-              f"{r.priority}): "
-              f"lpips-proxy {r.lpips_vs_clean:.4f}  "
-              f"psnr {r.psnr_vs_clean_db:.2f} dB  "
-              f"corrected(batch) {r.batch_corrected_elems}  "
-              f"evals {r.n_model_evals}{miss}")
+        if r.tokens is not None:
+            print(f"  req {r.request_id} (batch {r.batch_index}, op {r.op}, "
+                  f"{r.priority}): {len(r.tokens)} tokens  "
+                  f"match-vs-clean {r.token_match_vs_clean:.3f}  "
+                  f"abft-detections {r.ar_detections}  "
+                  f"kv-rollbacks {r.ar_rollbacks}  "
+                  f"evals {r.n_model_evals}{miss}")
+        else:
+            print(f"  req {r.request_id} (batch {r.batch_index}, op {r.op}, "
+                  f"{r.priority}): "
+                  f"lpips-proxy {r.lpips_vs_clean:.4f}  "
+                  f"psnr {r.psnr_vs_clean_db:.2f} dB  "
+                  f"corrected(batch) {r.batch_corrected_elems}  "
+                  f"evals {r.n_model_evals}{miss}")
         print(f"    perfmodel/request: baseline "
               f"{r.baseline_energy_j:.2f}J/{r.baseline_latency_s:.3f}s -> "
               f"{r.energy_j:.2f}J/{r.latency_s:.3f}s "

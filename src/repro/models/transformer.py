@@ -346,6 +346,55 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
     return logits, Cache(k, v, new_ssm, cache.pos + 1), new_store
 
 
+def decode_step_stats(cfg: ModelConfig, params: Params, cache: Cache,
+                      tokens: jax.Array, ctx_factory
+                      ) -> Tuple[jax.Array, Cache, Dict[str, jax.Array]]:
+    """One decode step routed through caller-supplied execution contexts.
+
+    ``ctx_factory(layer_idx)`` returns a duck-typed ExecContext (anything
+    with ``.matmul(x, w, name=, rclass=)`` and a ``.stats`` dict of traced
+    scalars) built fresh per layer; the serving AR path uses this to run
+    statistical-ABFT detection (serving/ar.StatAbftContext) without the
+    checkpoint-store plumbing ``decode_step(..., drift=...)`` carries.
+    Returns ``(logits, cache, stats)`` with stats tree-summed over layers
+    -- unlike ``decode_step``, which discards per-layer ctx.stats.
+
+    SSM layers route no GEMMs through the ctx (mamba2 scans are unprotected
+    -- documented in docs/servable.md), and MoE FFNs only protect the
+    attention projections; both still contribute well-formed zero stats.
+    """
+    x = _embed(cfg, params, tokens, None)
+    positions = jnp.full((1,), cache.pos, jnp.int32)
+
+    def body(carry, p_i, extra):
+        xc, layer_idx = carry
+        win, kv_i, ssm_i = extra
+        rclass = jnp.where(layer_idx < 1, dvfs.CLASS_FIRST_BLOCK,
+                           dvfs.CLASS_BODY)
+        ctx = ctx_factory(layer_idx)
+        y, new_kv, new_ssm, _ = _layer(cfg, p_i, xc, window=win,
+                                       positions=positions, mode="decode",
+                                       cache_kv=kv_i, cache_pos=cache.pos,
+                                       ssm_state=ssm_i, ctx=ctx,
+                                       rclass=rclass)
+        return (constrain(y, "act"), layer_idx + 1), (new_kv, new_ssm,
+                                                      dict(ctx.stats))
+
+    xs = (_window_xs(cfg),
+          (cache.k, cache.v) if cache.k is not None else None,
+          cache.ssm)
+    (x, _), ys = common.scan_layers(body, (x, jnp.int32(0)),
+                                    params["layers"], xs_extra=xs,
+                                    remat=False,
+                                    unroll=not cfg.scan_layers)
+    new_kv, new_ssm, stats_layers = ys
+    stats = jax.tree.map(lambda a: jnp.sum(a, axis=0), stats_layers)
+    k, v = (new_kv if new_kv is not None else (None, None))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, Cache(k, v, new_ssm, cache.pos + 1), stats
+
+
 # ================================================== windowed decode (opt)
 #
 # Perf-optimized decode for local/global interleaved architectures

@@ -78,7 +78,18 @@ def activation_bytes(cfg: ModelConfig, batch: int = 1) -> float:
         s, c = cfg.latent_size, cfg.unet_channels
         return 4.0 * batch * sum((s // 2 ** i) ** 2 * ch * 8
                                  for i, ch in enumerate(c))
-    raise ValueError(cfg.family)
+    # LM decode step: the projection-GEMM outputs the statistical-ABFT
+    # context checks (serving/ar.py) -- attn q/k/v/o plus the dense MLP.
+    # SSM layers route no GEMMs through the protected path (0 bytes) and
+    # MoE expert FFNs are unprotected, mirroring the coverage documented
+    # in docs/servable.md.
+    per_layer = 0.0
+    if cfg.family != "ssm":
+        per_layer += (cfg.n_heads * cfg.hd + 2 * cfg.kv_heads * cfg.hd
+                      + cfg.d_model)
+        if cfg.family != "moe":
+            per_layer += 2.0 * cfg.d_ff + cfg.d_model
+    return 4.0 * batch * cfg.n_layers * per_layer
 
 
 def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,

@@ -102,8 +102,32 @@ def cell_flops(cfg: ModelConfig, shape: shapes_lib.ShapeSpec) -> Dict[str, float
     raise ValueError(shape.kind)
 
 
+#: nominal decode context length the per-token serving cost is quoted at
+#: (KV reads grow with position; the engine charges a fixed mid-stream
+#: context so batch cost stays affine in step count like diffusion).
+DECODE_CONTEXT = 1024
+
+
 def gemm_macs_per_model_eval(cfg: ModelConfig, batch: int = 1) -> float:
-    """INT8 MACs for one denoiser evaluation (the perf/energy model unit)."""
+    """INT8 MACs for one model evaluation (the perf/energy model unit).
+
+    For diffusion families one eval is a denoiser pass over the latent
+    grid; for LM families one eval is ONE DECODE STEP (a token per
+    sequence): weight MACs ~= active params, plus window-clipped KV
+    attention reads at ``DECODE_CONTEXT``, plus the SSD recurrence for
+    ssm/hybrid layers. This is the per-token cost the DeadlineScheduler's
+    AR admission estimates multiply by the step count.
+    """
+    if cfg.family not in ("dit", "unet"):
+        macs = active_params(cfg)
+        attn = 0.0
+        if cfg.family != "ssm":
+            for w in cfg.layer_windows():
+                eff = DECODE_CONTEXT if w == 0 else min(w, DECODE_CONTEXT)
+                attn += 2.0 * eff * cfg.n_heads * cfg.hd
+        if cfg.family in ("ssm", "hybrid"):
+            attn += cfg.n_layers * _ssd_flops(cfg, 1, 1) / 2.0
+        return batch * (macs + attn)
     if cfg.family == "dit":
         t = (cfg.latent_size // cfg.patch_size) ** 2
         d = cfg.d_model

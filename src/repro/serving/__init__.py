@@ -60,6 +60,11 @@ restore-on-rollback), the planner resolves
 bit-identical to an offload-free engine.
 """
 from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
+from repro.serving.servable import (PARADIGM_BY_FAMILY, UNSUPPORTED_FAMILIES,
+                                    AutoregressiveServable,
+                                    DiffusionServable, ServableModel,
+                                    UnsupportedArchError, build_servable,
+                                    paradigm_for)
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
 from repro.serving.engine import OP_BY_NAME, DriftServeEngine, EngineStats
 from repro.serving.request import (PRIORITY_RANK, REQUEST_OPS,
@@ -79,6 +84,9 @@ from repro.serving.telemetry import (EngineTelemetry, GuardbandConfig,
 
 __all__ = [
     "DriftServeEngine", "ShardedDriftServeEngine", "make_engine",
+    "ServableModel", "DiffusionServable", "AutoregressiveServable",
+    "build_servable", "paradigm_for", "PARADIGM_BY_FAMILY",
+    "UNSUPPORTED_FAMILIES", "UnsupportedArchError",
     "EngineStats", "OP_BY_NAME",
     "GenerationRequest", "RequestQueue", "RequestResult", "PreviewEvent",
     "REQUEST_OPS", "REQUEST_PRIORITIES", "PRIORITY_RANK",

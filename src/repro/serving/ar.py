@@ -1,0 +1,272 @@
+"""Autoregressive decode loop with statistical ABFT + KV-window rollback.
+
+This is the second inference paradigm behind the ``ServableModel``
+protocol (docs/servable.md): token-by-token greedy decoding over the
+unified LM (``models/transformer.py``, reusing its KV ``Cache``), run
+under the same DVFS ladder as the diffusion path, with ReaLM-style
+**statistical ABFT** (``kernels/stat_abft.py``) on every projection GEMM
+and a KV-cache snapshot/rollback story mirroring the diffusion
+checkpoint store:
+
+  * every decode step routes ``attn.{q,k,v,o}`` / ``mlp.{gate,up,down}``
+    through a detection-only ``StatAbftContext``: bit flips are injected
+    on the float GEMM outputs at the operating point's BER, and per-row
+    checksum residuals are compared against the calibrated rounding
+    envelope. Detections are summed inside the jitted step -- under a
+    sharded mesh that sum lowers to a psum across the ``data`` axis,
+    exactly like the diffusion BER monitor's detection tap;
+  * decoding proceeds in **windows** of ``rollback_interval`` tokens.
+    Before each window the host snapshots ``(cache, last_token)`` --
+    O(1), JAX arrays are immutable so a snapshot is a reference. If the
+    window reports any detection, the snapshot is restored and the window
+    replays with injection scaled to zero (same compiled fn; ``ber_scale``
+    is a traced operand, so the replay costs no retrace). Corrupted
+    windows therefore revert-and-replay instead of recompute-from-scratch
+    -- the KV analogue of the diffusion tile rollback;
+  * the shared engine BER monitor (``dvfs.ber_monitor_update``) is fed
+    once per primary decode step from the detection count, driving the
+    same ``op="auto"`` ladder feedback as diffusion serving.
+
+Unlike the diffusion path there is no inline correction: the existing
+``exec_ctx`` "stat_abft" mode corrects against a clean duplicate GEMM,
+which would defeat the point -- here detection is cheap (one rank-1
+checksum lane) and **correction is the window rollback**.
+
+Compiled-function accounting: ``make_decoder`` returns exactly two jitted
+fns (prefill + decode step) per ``SamplerKey``; both fire ``on_trace``
+while JAX stages them, so the serving cache's trace counter stays ground
+truth. The decode step takes the step index, monitor state, and
+``ber_scale`` as traced operands -- one trace serves every step of every
+window, primary or replay.
+
+Protection coverage: SSM (mamba2) scans and MoE expert FFNs do not route
+through the context (no projection GEMMs on the protected path); for the
+``ssm`` family the GEMM word count is zero and detection is a no-op --
+the registry still serves it (fault injection off), docs/servable.md
+documents the gap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvfs, fault
+from repro.kernels import stat_abft
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+#: fixed prompt length: prompts are synthetic (seed-derived), a static
+#: length keeps the prefill trace unique per SamplerKey.
+PROMPT_LEN = 8
+
+
+def _site_id(name: str) -> int:
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF
+
+
+def prompt_tokens(cfg: ModelConfig, seeds) -> jax.Array:
+    """Deterministic per-seed synthetic prompts, (B, PROMPT_LEN) int32."""
+    base = jax.random.PRNGKey(0x41525052)  # "ARPR"
+    rows = [
+        jax.random.randint(jax.random.fold_in(base, int(s)),
+                           (PROMPT_LEN,), 0, cfg.vocab, dtype=jnp.int32)
+        for s in seeds
+    ]
+    return jnp.stack(rows)
+
+
+def protected_words_per_step(cfg: ModelConfig, batch: int) -> int:
+    """Static count of GEMM output words routed through the ABFT context
+    per decode step (drives the BER-monitor normalization)."""
+    d, h, hkv, hd, f = (cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd,
+                        cfg.d_ff)
+    per_layer = 0
+    if cfg.family != "ssm":
+        per_layer += h * hd + 2 * hkv * hd + d          # attn.{q,k,v,o}
+        if cfg.family != "moe":
+            per_layer += 2 * f + d                      # mlp.{gate,up,down}
+    return cfg.n_layers * per_layer * batch
+
+
+class StatAbftContext:
+    """Detection-only execution context for one decode layer.
+
+    Duck-typed against ``core.exec_ctx.ExecContext`` where the model
+    touches it (``.matmul(x, w, name=, rclass=)`` + ``.stats``): computes
+    the clean product in the model dtype, injects DVFS bit flips on the
+    float32 view at ``ber_by_class[rclass] * ber_scale``, and (in
+    ``stat_abft`` mode) flags rows whose checksum residual exceeds the
+    statistical threshold. No correction, no checkpoint store.
+    """
+
+    def __init__(self, key: jax.Array, step: jax.Array,
+                 ber_by_class: jax.Array, detect: bool):
+        self.key = key
+        self.step = step
+        self.ber_by_class = ber_by_class
+        self.detect = detect
+        self.stats: Dict[str, jax.Array] = {
+            "detected_rows": jnp.float32(0.0),
+            "gemm_words": jnp.float32(0.0),
+        }
+
+    def matmul(self, x: jax.Array, w: jax.Array, *, name: str,
+               rclass) -> jax.Array:
+        y = x @ w                                    # clean product
+        ber = self.ber_by_class[rclass]
+        fkey = fault.site_key(self.key, self.step, _site_id(name), 0)
+        y_faulty = fault.inject_f32(y.astype(jnp.float32), fkey, ber)
+        if self.detect:
+            flagged = stat_abft.detect(x, w, y_faulty)
+            self.stats["detected_rows"] += jnp.sum(
+                flagged.astype(jnp.float32))
+        self.stats["gemm_words"] += jnp.float32(y.size)
+        return y_faulty.astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    """Static decode-loop shape baked into the compiled fns."""
+    steps: int                   # tokens to generate (incl. prefill's)
+    window: int                  # rollback window, in decode steps
+    mode: str                    # "clean" | "faulty" | "stat_abft"
+    monitor_target_ber: float
+
+
+@dataclasses.dataclass(frozen=True)
+class DecoderFns:
+    """What ``make_decoder`` hands the serving cache: two jitted fns plus
+    the static config ``decode_batch`` drives the host loop with."""
+    dcfg: DecodeConfig
+    prefill: Callable
+    step: Callable
+    words_per_step: int
+
+
+class DecodeOut(NamedTuple):
+    tokens: jax.Array            # (B, steps) int32 generated tokens
+    monitor: dvfs.BerMonitorState
+    detections: float            # flagged checksum rows, summed
+    rollbacks: int               # windows reverted + replayed
+    n_model_evals: int           # prefill + decode steps incl. replays
+    n_words: float               # GEMM words checked (0 for clean/ssm)
+
+
+def make_decoder(cfg: ModelConfig, dcfg: DecodeConfig, *,
+                 schedule: Optional[dvfs.DvfsSchedule] = None,
+                 on_trace: Optional[Callable[[], None]] = None,
+                 mesh=None) -> DecoderFns:
+    """Build the two compiled fns for one AR serving configuration.
+
+    ``schedule`` is the per-step DVFS BER table (None => fault-free);
+    ``mesh`` is accepted for signature parity with the diffusion sampler
+    factory -- sharding comes from the engine's ambient mesh/policy at
+    trace time, nothing mesh-specific is baked here.
+    """
+    del mesh
+    max_seq = PROMPT_LEN + dcfg.steps
+    n_rows = max(dcfg.steps, 1)
+    if schedule is not None:
+        ber_table = jnp.asarray(schedule.ber_table, jnp.float32)
+        n_rows = ber_table.shape[0]
+    else:
+        ber_table = jnp.zeros((n_rows, dvfs.N_CLASSES), jnp.float32)
+
+    def _prefill(params, tokens):
+        if on_trace is not None:
+            on_trace()
+        logits, cache = transformer.prefill(cfg, params, tokens, max_seq)
+        first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return first, cache
+
+    def _step(params, cache, tok, step, monitor, key, ber_scale):
+        if on_trace is not None:
+            on_trace()
+        if dcfg.mode == "clean":
+            logits, cache, _ = transformer.decode_step(
+                cfg, params, cache, tok[:, None], None)
+            det = jnp.float32(0.0)
+            words = jnp.float32(0.0)
+        else:
+            row = ber_table[jnp.clip(step, 0, n_rows - 1)] * ber_scale
+            base = jax.random.fold_in(key, step)
+
+            def ctx_factory(layer_idx):
+                return StatAbftContext(
+                    key=jax.random.fold_in(base, layer_idx), step=step,
+                    ber_by_class=row, detect=(dcfg.mode == "stat_abft"))
+
+            logits, cache, stats = transformer.decode_step_stats(
+                cfg, params, cache, tok[:, None], ctx_factory)
+            det = stats["detected_rows"]
+            words = stats["gemm_words"]
+            monitor = dvfs.ber_monitor_update(
+                monitor, det,
+                max(protected_words_per_step(cfg, tok.shape[0]), 1),
+                0, dcfg.monitor_target_ber)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, cache, monitor, det, words
+
+    return DecoderFns(dcfg=dcfg, prefill=jax.jit(_prefill),
+                      step=jax.jit(_step),
+                      words_per_step=protected_words_per_step(cfg, 1))
+
+
+def decode_batch(fns: DecoderFns, params, tokens: jax.Array,
+                 monitor0: dvfs.BerMonitorState,
+                 run_key: jax.Array) -> DecodeOut:
+    """Host decode loop: prefill, then windows of decode steps with
+    snapshot / detect / rollback-replay. See module docstring."""
+    dcfg = fns.dcfg
+    assert tokens.shape[1] == PROMPT_LEN, tokens.shape
+    last_tok, cache = fns.prefill(params, tokens)
+    generated = [last_tok]
+    monitor = monitor0
+    detections = 0.0
+    n_words = 0.0
+    rollbacks = 0
+    n_model_evals = 1                    # the prefill pass
+    window = max(dcfg.window, 1)
+
+    i = 1
+    while i < dcfg.steps:
+        n = min(window, dcfg.steps - i)
+        snap_cache, snap_tok = cache, last_tok      # O(1): arrays immutable
+        window_toks = []
+        det_w = 0.0
+        for j in range(n):
+            step = jnp.int32(i + j)
+            last_tok, cache, monitor, det, words = fns.step(
+                params, cache, last_tok, step, monitor, run_key,
+                jnp.float32(1.0))
+            window_toks.append(last_tok)
+            det_w += float(det)
+            n_words += float(words)
+        detections += det_w
+        n_model_evals += n
+        if dcfg.mode == "stat_abft" and det_w > 0:
+            # Revert the corrupted window and replay it fault-free: same
+            # compiled fn, ber_scale=0 (monitor output of the replay is
+            # discarded -- the ladder saw the faulty pass, which is the
+            # signal it exists for).
+            cache, last_tok = snap_cache, snap_tok
+            window_toks = []
+            for j in range(n):
+                step = jnp.int32(i + j)
+                last_tok, cache, _m, _d, _w = fns.step(
+                    params, cache, last_tok, step, monitor, run_key,
+                    jnp.float32(0.0))
+                window_toks.append(last_tok)
+            rollbacks += 1
+            n_model_evals += n
+        generated.extend(window_toks)
+        i += n
+
+    toks = jnp.stack(generated, axis=1)             # (B, steps)
+    return DecodeOut(tokens=toks, monitor=monitor,
+                     detections=detections, rollbacks=rollbacks,
+                     n_model_evals=n_model_evals, n_words=n_words)

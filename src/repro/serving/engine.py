@@ -90,17 +90,14 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import dvfs as dvfs_lib
-from repro.core import metrics
-from repro.core.exec_ctx import DriftSystemConfig
-from repro.core.rollback import RollbackConfig
 from repro.diffusion import sampler as sampler_lib
-from repro.diffusion.taylorseer import TaylorSeerConfig
 from repro.perfmodel import energy
 from repro.serving.batcher import MicroBatch, MicroBatcher
 from repro.serving.cache import CompiledSamplerCache, SamplerKey
+from repro.serving import servable as servable_lib
 from repro.serving.offload import OffloadConfig, OffloadPlanner, OffloadStore
-from repro.serving.request import (GenerationRequest, PreviewEvent,
-                                   RequestQueue, RequestResult)
+from repro.serving.request import (GenerationRequest, RequestQueue,
+                                   RequestResult)
 from repro.serving.telemetry import EngineTelemetry
 from repro.train import steps as steps_lib
 
@@ -132,9 +129,10 @@ class _BatchCtx:
     batch_index: int
     params: object
     padded_seeds: Tuple[int, ...]
-    latents: object
-    cond: object
-    text: object
+    # Paradigm-shaped staged inputs: (latents, cond, text) for diffusion,
+    # (prompt_tokens,) for autoregressive -- the batch's ServableModel
+    # built them and is the only code that unpacks them.
+    inputs: Tuple
     run_key: object
     # Filled by the offload-enabled drains after joining the store: this
     # batch's OffloadStats delta for the telemetry tap. None = no offload
@@ -207,6 +205,26 @@ class DriftServeEngine:
         self._planner: Optional[OffloadPlanner] = None
         self._interval_memo: Dict[Tuple, int] = {}
         self._stall_memo: Dict[Tuple, float] = {}
+        # One ServableModel per paradigm (they're stateless adapters over
+        # the engine; per-batch state rides _BatchCtx).
+        self._servables: Dict[str, servable_lib.ServableModel] = {}
+
+    # ---------------------------------------------------------- servables
+    def servable_for(self, arch: str) -> servable_lib.ServableModel:
+        """The ServableModel adapter serving this arch's paradigm; raises
+        ``UnsupportedArchError`` for families outside the registry."""
+        paradigm = servable_lib.paradigm_for(arch)
+        sv = self._servables.get(paradigm)
+        if sv is None:
+            sv = self._servables[paradigm] = servable_lib.build_servable(
+                paradigm, self)
+        return sv
+
+    def place_inputs(self, tree):
+        """Device placement hook for servable-built batch inputs: identity
+        here; the sharded engine device_puts each leaf with its mesh
+        batch spec."""
+        return tree
 
     # ------------------------------------------------------------- intake
     def submit(self, **fields) -> int:
@@ -231,12 +249,10 @@ class DriftServeEngine:
             fields["steps"] = min(fields.get("steps", default_steps),
                                   budget)
         fields.setdefault("submitted_at_s", self.clock_s)
-        family = configs.get_config(fields["arch"]).family
-        if family not in ("dit", "unet"):
-            raise ValueError(
-                f"arch {fields['arch']!r} is a {family} model; the serving "
-                "engine drives the diffusion archs (use launch/train.py "
-                "for LMs)")
+        # Paradigm resolution + paradigm-irrelevant-knob validation: raises
+        # UnsupportedArchError for families outside the ServableModel
+        # registry, ValueError for e.g. an AR request with taylorseer=True.
+        fields = self.servable_for(fields["arch"]).validate_request(fields)
         rid = self.queue.submit(**fields)
         self.telemetry.on_submit()
         return rid
@@ -414,67 +430,6 @@ class DriftServeEngine:
                 cfg, jax.random.fold_in(self._base_key, tag))
         return self._params[k]
 
-    def _batch_inputs(self, model_cfg, seeds: List[int]):
-        """Per-request initial latents + conditioning, stacked to the bucket."""
-        shape = (model_cfg.latent_size, model_cfg.latent_size,
-                 model_cfg.latent_channels)
-        lat = jnp.stack([
-            jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(s), 7),
-                              shape) for s in seeds])
-        if model_cfg.cond_tokens:
-            text = jnp.stack([
-                0.1 * jax.random.normal(
-                    jax.random.fold_in(jax.random.PRNGKey(s), 8),
-                    (model_cfg.cond_tokens, model_cfg.cond_dim))
-                for s in seeds])
-            return lat, None, text
-        cond = jnp.asarray([s % max(model_cfg.num_classes, 1) for s in seeds],
-                           dtype=jnp.int32)
-        return lat, cond, None
-
-    def _build_sampler(self, key: SamplerKey) -> Callable:
-        model_cfg = configs.get_config(key.arch, smoke=key.smoke)
-        if key.mode == "clean" or not key.op:
-            schedule = None
-        else:
-            schedule = dvfs_lib.fine_grained_schedule(
-                key.steps, OP_BY_NAME[key.op],
-                nominal_steps=self.nominal_steps)
-        scfg = sampler_lib.SamplerConfig(
-            num_sample_steps=key.steps,
-            drift=DriftSystemConfig(
-                mode=key.mode,
-                rollback=RollbackConfig(interval=key.rollback_interval)),
-            schedule=schedule,
-            taylorseer=TaylorSeerConfig(enabled=key.taylorseer),
-            monitor_target_ber=self.monitor_target_ber)
-        return self._sampler_factory(key, model_cfg, scfg,
-                                     self.cache.note_trace)
-
-    def _clean_reference(self, key: SamplerKey, seeds: Tuple[int, ...],
-                         params, latents, cond, text) -> jax.Array:
-        """Error-free reference latents for this batch, cached by
-        (configuration, latent seeds): the compiled clean sampler jits once
-        per configuration and each unique input batch samples once."""
-        # stream=0: previews never need a reference, and streamed finals
-        # are bit-identical to one-shot, so both share one clean sample.
-        ckey = dataclasses.replace(key, mode="clean", op="", stream=0)
-        sample_id = (ckey, seeds)
-        cached = self._clean_samples.get(sample_id)
-        if cached is not None:
-            self._clean_samples.move_to_end(sample_id)
-            self.stats.clean_sample_hits += 1
-            return cached
-        fn = self.cache.get(ckey, self._build_sampler)
-        out = fn(params, jax.random.PRNGKey(0), latents, cond, text,
-                 dvfs_lib.ber_monitor_init())
-        clean = jnp.clip(out.latents, -1, 1)
-        self._clean_samples[sample_id] = clean
-        while len(self._clean_samples) > self._clean_cache_size:
-            self._clean_samples.popitem(last=False)
-        self.stats.clean_samples_computed += 1
-        return clean
-
     def _energy_model_for(self):
         if self._energy_model is None:
             self._energy_model = energy.calibrate()
@@ -487,8 +442,8 @@ class DriftServeEngine:
 
     # ---------------------------------------------------------- one batch
     def _prepare_batch(self, mb: MicroBatch) -> _BatchCtx:
-        """Stage params + stacked inputs for one micro-batch (shared by the
-        one-shot and streaming execution paths)."""
+        """Stage params + servable-built inputs for one micro-batch (shared
+        by the one-shot and streaming execution paths)."""
         key = mb.key
         batch_index = self._batch_counter
         self._batch_counter += 1
@@ -499,129 +454,61 @@ class DriftServeEngine:
         params = self._params_for(key.arch, key.smoke)
         live_seeds = [r.seed for r in mb.requests]
         padded_seeds = tuple(live_seeds + [live_seeds[-1]] * mb.n_pad)
-        latents, cond, text = self._batch_inputs(model_cfg,
-                                                 list(padded_seeds))
+        inputs = self.servable_for(key.arch).batch_inputs(
+            model_cfg, list(padded_seeds))
         run_key = jax.random.fold_in(self._base_key, batch_index)
         return _BatchCtx(batch_index=batch_index, params=params,
-                         padded_seeds=padded_seeds, latents=latents,
-                         cond=cond, text=text, run_key=run_key)
+                         padded_seeds=padded_seeds, inputs=inputs,
+                         run_key=run_key)
 
     def _run_batch(self, mb: MicroBatch) -> List[RequestResult]:
         ctx = self._prepare_batch(mb)
-        store = self._offload_for(mb.key)
-        if store is None:
-            fn = self.cache.get(mb.key, self._build_sampler)
-            out = fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
-                     ctx.text, self.monitor)
-            return self._finish_batch(mb, ctx, out)
-        # Offload-enabled one-shot path: run the windowed sampler with the
-        # refresh interval as the window so every committed snapshot
-        # offloads between windows, overlapped with the next window's
-        # dispatch. Streamed finals are bit-identical to the one-shot
-        # scan (the PR 3 invariant), so enabling offload cannot change a
-        # single latent bit -- tests/test_offload.py asserts exactly that.
-        window = min(mb.key.rollback_interval, mb.key.steps)
-        skey = dataclasses.replace(mb.key, stream=window)
-        fn = self.cache.get(skey, self._build_sampler)
-        out = None
-        store.begin_batch(interval=mb.key.rollback_interval,
-                          batch_index=ctx.batch_index)
-        self._active_offload = store
-        try:
-            for ev in fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
-                         ctx.text, self.monitor):
-                if isinstance(ev, sampler_lib.SampleOutput):
-                    out = ev           # previews are discarded: run() only
-        finally:
-            self._active_offload = None
-            # join the in-flight commit; the settled delta feeds the
-            # telemetry tap in _finish_batch
-            ctx.offload_delta = store.finish_batch()
-        assert out is not None, "offload sampler ended without SampleOutput"
+        out = self.servable_for(mb.key.arch).execute(mb, ctx)
         return self._finish_batch(mb, ctx, out)
 
     def _run_batch_stream(self, mb: MicroBatch, preview_interval: int):
-        """Streaming twin of ``_run_batch``: run the windowed sampler for
-        this bucket, yielding per-request ``PreviewEvent``s between windows,
-        then the batch's ``RequestResult``s. The compiled-fn cache slot is
-        keyed with ``stream=preview_interval``; everything downstream
-        (metrics, energy, monitor carry) reuses the one-shot path, so a
-        streamed request's result record is indistinguishable from an
-        unstreamed one apart from having produced previews on the way."""
+        """Streaming twin of ``_run_batch``: the servable yields per-request
+        ``PreviewEvent``s between windows, then ``('final', out)``, and the
+        batch finishes through the same accounting as the one-shot path --
+        so a streamed request's result record is indistinguishable from an
+        unstreamed one apart from having produced previews on the way.
+        Paradigms without previews (autoregressive) raise a clear error."""
         ctx = self._prepare_batch(mb)
-        skey = dataclasses.replace(mb.key, stream=preview_interval)
-        fn = self.cache.get(skey, self._build_sampler)
         out = None
-        store = self._offload_for(mb.key)
-        if store is not None:
-            # commits ride the preview windows: the store itself decides
-            # which window boundaries crossed a refresh step
-            store.begin_batch(interval=mb.key.rollback_interval,
-                              batch_index=ctx.batch_index)
-            self._active_offload = store
-        try:
-            for ev in fn(ctx.params, ctx.run_key, ctx.latents, ctx.cond,
-                         ctx.text, self.monitor):
-                if isinstance(ev, sampler_lib.SampleOutput):
-                    out = ev
-                    break           # terminating item; nothing follows
-                preview = jnp.clip(ev.latents, -1, 1)
-                for slot, req in enumerate(mb.requests):  # live slots only
-                    self.stats.preview_events += 1
-                    self.telemetry.on_preview()
-                    yield PreviewEvent(request_id=req.request_id,
-                                       batch_index=ctx.batch_index,
-                                       step=int(ev.step),
-                                       total_steps=mb.key.steps,
-                                       latents=preview[slot])
-        finally:
-            if store is not None:
-                self._active_offload = None
-                ctx.offload_delta = store.finish_batch()
-        assert out is not None, "streaming sampler ended without SampleOutput"
+        sv = self.servable_for(mb.key.arch)
+        for ev in sv.execute_stream(mb, ctx, preview_interval):
+            if isinstance(ev, tuple) and ev and ev[0] == "final":
+                out = ev[1]
+                break           # terminating item; nothing follows
+            yield ev
+        assert out is not None, "servable stream ended without a final"
         yield from self._finish_batch(mb, ctx, out)
 
     def _finish_batch(self, mb: MicroBatch, ctx: _BatchCtx,
-                      out: sampler_lib.SampleOutput) -> List[RequestResult]:
+                      out) -> List[RequestResult]:
         """Metrics, energy attribution, monitor/clock carry, and per-request
-        result records for a completed batch."""
+        result records for a completed batch -- paradigm specifics come
+        back from the servable as a ``BatchOutcome``."""
         key = mb.key
         batch_index = ctx.batch_index
-        params, padded_seeds = ctx.params, ctx.padded_seeds
-        latents, cond, text = ctx.latents, ctx.cond, ctx.text
-        if key.mode in _MONITORED_MODES:
+        protected = key.mode in _MONITORED_MODES
+        if protected:
             self.monitor = out.monitor   # Sec 5.1 carry-over across batches
 
-        img = jnp.clip(out.latents, -1, 1)
-        if key.mode == "clean":
-            clean = img       # the run IS the reference; don't jit a twin
-        else:
-            clean = self._clean_reference(key, padded_seeds, params,
-                                          latents, cond, text)
+        outcome = self.servable_for(key.arch).finalize(mb, ctx, out)
         # report the engine's post-batch state: for unmonitored modes the
         # sampler's internal EMA decays toward zero on no-detection steps,
         # which would misrepresent the actual error estimate
         mon_ber = float(self.monitor.ema_ber)
         mon_idx = int(self.monitor.op_index)
-        corrected = int(out.total_corrected)
-        nevals = int(out.n_model_evals)
+        corrected = outcome.corrected
+        nevals = outcome.n_model_evals
 
         # perfmodel attribution: full-arch energy model, bucket cost split
         # across the live requests (padding overhead lands on them).
         em = self._energy_model_for()
         full = self._full_cfg(key.arch)
-        op_point = OP_BY_NAME.get(key.op, dvfs_lib.NOMINAL)
-        # only protected modes pay ABFT compute + checkpoint DRAM traffic;
-        # clean/faulty/float_clean run neither mechanism
-        protected = key.mode in _MONITORED_MODES
-        rc = energy.RunConfig(
-            num_steps=key.steps, nominal_steps=self.nominal_steps,
-            aggressive=op_point,
-            ckpt_interval=key.rollback_interval if protected else 10 ** 9,
-            abft_enabled=protected,
-            taylorseer_interval=3 if key.taylorseer else 0,
-            recovery_tiles_per_step=corrected / max(key.steps, 1)
-            / (32 * 32))
+        rc = outcome.rc
         n_live = len(mb.requests)
         cost = energy.per_request_cost(full, rc, batch=key.bucket,
                                        n_live=n_live, em=em)
@@ -642,7 +529,6 @@ class DriftServeEngine:
 
         results = []
         for slot, req in enumerate(mb.requests):
-            a, b = img[slot:slot + 1], clean[slot:slot + 1]
             missed = (req.absolute_deadline_s is not None
                       and completed_at > req.absolute_deadline_s + 1e-9)
             self.stats.deadline_misses += int(missed)
@@ -653,8 +539,6 @@ class DriftServeEngine:
                 op=key.op or "nominal",
                 mode=key.mode,
                 steps=key.steps,
-                lpips_vs_clean=float(metrics.lpips_proxy(a, b)),
-                psnr_vs_clean_db=float(metrics.psnr(a, b)),
                 batch_corrected_elems=corrected,
                 n_model_evals=nevals,
                 energy_j=cost["energy_j"],
@@ -663,7 +547,6 @@ class DriftServeEngine:
                 baseline_latency_s=base["latency_s"],
                 monitor_ber=mon_ber,
                 monitor_op_index=mon_idx,
-                latents=a[0],
                 priority=req.priority,
                 deadline_s=req.deadline_s,
                 completed_at_s=completed_at,
@@ -671,6 +554,7 @@ class DriftServeEngine:
                     completed_at - req.submitted_at_s - batch_latency_s,
                     0.0),
                 deadline_missed=missed,
+                **outcome.per_slot[slot],
             ))
         # telemetry tap: metrics + latency history for the scheduler's
         # learned estimates, and (monitored modes) one guardband-controller
@@ -679,7 +563,7 @@ class DriftServeEngine:
             key=key, n_live=n_live, n_pad=mb.n_pad,
             latency_s=batch_latency_s, ema_ber=mon_ber, op_index=mon_idx,
             corrected=corrected,
-            n_words=int(latents.size) * max(key.steps, 1),
+            n_words=outcome.n_words,
             monitored=protected, clock_s=self.clock_s,
             queue_depth=len(self.queue), results=results)
         if ctx.offload_delta is not None:

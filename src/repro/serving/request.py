@@ -1,8 +1,10 @@
 """Serving request/result types and the FIFO request queue.
 
-A ``GenerationRequest`` is one user-facing generation job: which diffusion
-arch to run, how many DDIM steps, which DRIFT protection mode, and which
-DVFS operating point -- ``"auto"`` delegates the choice to the engine's
+A ``GenerationRequest`` is one user-facing generation job: which arch to
+run (the config family picks the serving paradigm -- diffusion sampling
+or autoregressive decoding, see ``serving/servable.py``), how many DDIM
+steps or generated tokens, which protection mode, and which DVFS
+operating point -- ``"auto"`` delegates the choice to the engine's
 shared BER-monitor ladder (Sec 5.1). Since PR 3 a request also carries its
 *scheduling* contract -- ``priority``, ``deadline_s``, ``step_budget`` --
 which the deadline-aware scheduler (``serving/scheduler.py``) turns into a
@@ -149,6 +151,14 @@ class RequestResult:
     # clipped to [-1, 1], shape (H, W, C). Optional so metric-only fakes in
     # tests stay cheap; the real engine always fills it.
     latents: Optional[object] = None
+    # --- autoregressive results (None/0 on diffusion requests; see
+    # docs/servable.md). For AR requests ``lpips_vs_clean`` holds the
+    # token-mismatch fraction and ``psnr_vs_clean_db`` its -10*log10, so
+    # quality dashboards keep one schema across paradigms.
+    tokens: Optional[tuple] = None         # generated token ids
+    token_match_vs_clean: Optional[float] = None
+    ar_detections: int = 0                 # statistical-ABFT flagged rows
+    ar_rollbacks: int = 0                  # KV windows reverted + replayed
     # --- deadline bookkeeping (engine virtual clock, see module docstring)
     priority: str = "standard"
     deadline_s: Optional[float] = None     # the request's relative deadline

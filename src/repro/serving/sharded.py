@@ -118,11 +118,12 @@ class ShardedDriftServeEngine(DriftServeEngine):
                 params, shd.shardings_for(params, self.mesh))
         return self._params[k]
 
-    def _batch_inputs(self, model_cfg, seeds):
-        lat, cond, text = super()._batch_inputs(model_cfg, seeds)
-        put = lambda x: None if x is None else jax.device_put(
+    def place_inputs(self, tree):
+        # Batch-shaped staged inputs (whatever the paradigm's ServableModel
+        # built) get sharded along ``data``; jax.tree.map skips None leaves.
+        put = lambda x: jax.device_put(
             x, NamedSharding(self.mesh, shd.batch_spec(x.shape, self.mesh)))
-        return put(lat), put(cond), put(text)
+        return jax.tree.map(put, tree)
 
     # ------------------------------------------------------------ one batch
     def _run_batch(self, mb):

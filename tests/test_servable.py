@@ -1,0 +1,165 @@
+"""ServableModel protocol tests: registry totality, paradigm-irrelevant
+request-field validation on both engines, and the autoregressive serving
+path end-to-end (statistical ABFT detections + KV-window rollback through
+the plain engine, the DeadlineScheduler, and the sharded engine).
+
+The diffusion path's behavior is pinned elsewhere (test_serving*.py --
+those suites ran against the pre-refactor engine and must stay green);
+this module covers what the protocol added.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving import (PARADIGM_BY_FAMILY, UNSUPPORTED_FAMILIES,
+                           DeadlineScheduler, DriftServeEngine,
+                           ShardedDriftServeEngine, UnsupportedArchError,
+                           paradigm_for)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+AR_ARCH = "olmo-1b"        # smallest dense smoke config
+STEPS = 6
+
+
+# ------------------------------------------------------------- registry
+def test_family_partition_is_total():
+    """Every config family resolves to exactly one paradigm or is
+    explicitly unsupported -- a new config can't silently fall through."""
+    assert not set(PARADIGM_BY_FAMILY) & set(UNSUPPORTED_FAMILIES)
+    for arch in configs.list_archs():
+        fam = configs.get_config(arch, smoke=True).family
+        supported = fam in PARADIGM_BY_FAMILY
+        assert supported != (fam in UNSUPPORTED_FAMILIES), (
+            f"family {fam!r} ({arch}) must be in exactly one registry")
+        if supported:
+            assert paradigm_for(arch) == PARADIGM_BY_FAMILY[fam]
+        else:
+            with pytest.raises(UnsupportedArchError, match=arch):
+                paradigm_for(arch)
+
+
+def test_known_family_assignments():
+    assert paradigm_for("dit-xl-512") == "diffusion"
+    assert paradigm_for("sd15-unet") == "diffusion"
+    assert paradigm_for("olmo-1b") == "autoregressive"
+    assert paradigm_for("deepseek-moe-16b") == "autoregressive"
+    assert paradigm_for("mamba2-370m") == "autoregressive"
+    assert paradigm_for("hymba-1.5b") == "autoregressive"
+    for arch in ("whisper-base", "internvl2-76b"):
+        with pytest.raises(UnsupportedArchError):
+            paradigm_for(arch)
+
+
+# ------------------------------------------------- submit-time validation
+def _check_submit_validation(eng):
+    with pytest.raises(ValueError, match="taylorseer"):
+        eng.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+                   taylorseer=True)
+    with pytest.raises(ValueError, match="mode='drift'"):
+        eng.submit(arch=AR_ARCH, steps=STEPS, mode="drift")
+    with pytest.raises(UnsupportedArchError, match="whisper-base"):
+        eng.submit(arch="whisper-base", steps=STEPS, mode="clean")
+    assert len(eng.queue) == 0          # nothing slipped into the queue
+
+
+def test_ar_knob_validation_plain_engine():
+    _check_submit_validation(DriftServeEngine(bucket=2))
+
+
+@needs_mesh
+def test_ar_knob_validation_sharded_engine():
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_serving_mesh(model_parallel=1,
+                                      devices=jax.devices()[:2])
+    _check_submit_validation(ShardedDriftServeEngine(mesh=mesh, bucket=2))
+
+
+def test_ar_rejects_streaming():
+    """run_stream previews are latent images -- AR requests must fail
+    loudly, not yield garbage."""
+    eng = DriftServeEngine(bucket=2)
+    eng.submit(arch=AR_ARCH, steps=STEPS, mode="clean", op="nominal")
+    with pytest.raises(ValueError, match="previews are latent images"):
+        list(eng.run_stream(preview_interval=2))
+
+
+# --------------------------------------------------- AR serving end-to-end
+def test_ar_stat_abft_detects_and_rolls_back():
+    """The acceptance-criterion run: an AR request through the shared
+    engine, with injected faults detected by statistical ABFT and
+    corrected via KV-cache window rollback (replayed tokens match the
+    clean reference)."""
+    eng = DriftServeEngine(bucket=2)
+    eng.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+               op="undervolt", seed=0)
+    eng.submit(arch=AR_ARCH, steps=STEPS, mode="clean",
+               op="nominal", seed=1)
+    res = {r.mode: r for r in eng.run()}
+    assert set(res) == {"stat_abft", "clean"}
+
+    prot = res["stat_abft"]
+    assert prot.tokens is not None and len(prot.tokens) == STEPS
+    assert prot.latents is None
+    assert prot.ar_detections > 0, "undervolt BER produced no detections"
+    assert prot.ar_rollbacks >= 1, "detections did not trigger rollback"
+    assert prot.token_match_vs_clean == 1.0, (
+        "rolled-back decode should match the clean reference")
+    assert prot.n_model_evals > STEPS          # replays charged
+    assert prot.energy_j > 0 and prot.latency_s > 0
+
+    clean = res["clean"]
+    assert clean.ar_detections == 0 and clean.ar_rollbacks == 0
+    assert clean.token_match_vs_clean == 1.0
+    assert clean.n_model_evals == STEPS
+
+    # monitored mode fed the shared BER-monitor ladder
+    assert int(eng.monitor.n_updates) > 0
+    assert float(eng.monitor.ema_ber) > 0.0
+
+
+def test_ar_and_diffusion_share_one_engine():
+    """One engine, two paradigms: batches of each family serve through the
+    same queue/cache/monitor without interfering."""
+    eng = DriftServeEngine(bucket=2)
+    eng.submit(arch="dit-xl-512", steps=3, mode="drift", op="undervolt",
+               seed=0)
+    eng.submit(arch=AR_ARCH, steps=4, mode="clean", op="nominal", seed=1)
+    res = sorted(eng.run(), key=lambda r: r.request_id)
+    assert len(res) == 2
+    assert res[0].latents is not None and res[0].tokens is None
+    assert res[1].tokens is not None and res[1].latents is None
+    assert eng.stats.batches == 2
+
+
+def test_ar_through_deadline_scheduler():
+    """Admission control prices AR work per token (perfmodel LM branch)
+    and the scheduled request serves through the same engine."""
+    eng = DriftServeEngine(bucket=2)
+    sched = DeadlineScheduler(eng)
+    adm = sched.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+                       op="undervolt", priority="interactive", seed=3)
+    assert adm.admitted
+    res = sched.run()
+    assert len(res) == 1
+    assert res[0].tokens is not None and len(res[0].tokens) == STEPS
+    assert res[0].ar_detections > 0
+
+
+@needs_mesh
+def test_ar_sharded_engine_serves_and_detects():
+    """The same AR configuration through a data-parallel mesh: detections
+    are psum-reduced across shards and the run completes with rollback."""
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_serving_mesh(model_parallel=1,
+                                      devices=jax.devices()[:2])
+    eng = ShardedDriftServeEngine(mesh=mesh, bucket=2)
+    eng.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+               op="undervolt", seed=0)
+    res = eng.run()
+    assert len(res) == 1
+    assert res[0].ar_detections > 0 and res[0].ar_rollbacks >= 1
+    assert res[0].token_match_vs_clean == 1.0
