@@ -57,12 +57,13 @@ def main() -> None:
     em = engine._energy_model_for()
     full = engine._full_cfg(ARCH)
     for key in tele.estimator.keys():
-        arch, op, steps, bucket, mode, taylorseer, rollback = key
-        if mode != "drift" or taylorseer:
+        arch, op, steps, bucket, mode, taylorseer, rollback, precision = key
+        if mode != "drift" or taylorseer or precision != "int8":
             continue
         est = tele.estimator.estimate_s(arch, op, steps, bucket, mode=mode,
                                         taylorseer=taylorseer,
-                                        rollback_interval=rollback)
+                                        rollback_interval=rollback,
+                                        precision=precision)
         rc = energy.RunConfig(num_steps=steps,
                               nominal_steps=engine.nominal_steps,
                               aggressive=OP_BY_NAME[op])

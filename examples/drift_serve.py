@@ -35,6 +35,15 @@ to the unstreamed path):
         --steps 6 --op undervolt --priority interactive,background \
         --deadline 0.055,none --stream 2
 
+``--energy-budget`` / ``--quality-floor`` state a compute-optimal
+objective: admission resolves against the joint (steps x precision x
+TaylorSeer x DVFS) Pareto frontier -- minimum energy meeting the
+deadline, fastest point at or above the quality floor, or best quality
+inside the budget -- and rewrites all four knobs (docs/frontier.md):
+
+    PYTHONPATH=src python examples/drift_serve.py --requests 2 --batch 2 \
+        --steps 8 --op auto --quality-floor 0.9
+
 ``--sharded`` runs the same stream through ``ShardedDriftServeEngine``,
 spreading every micro-batch over the local (data, model) device mesh --
 on one device it degrades to the plain engine, and on a data-parallel
@@ -94,6 +103,17 @@ def build_parser():
                          "op-escalation / step-trimming")
     ap.add_argument("--step-budget", type=int, default=None, metavar="N",
                     help="per-request cap on denoising steps")
+    ap.add_argument("--energy-budget", type=float, default=None,
+                    metavar="J",
+                    help="per-request energy budget in Joules; admission "
+                         "resolves against the compute-optimal (steps x "
+                         "precision x TaylorSeer x DVFS) frontier "
+                         "(docs/frontier.md)")
+    ap.add_argument("--quality-floor", type=float, default=None,
+                    metavar="Q",
+                    help="minimum quality proxy in (0, 1]; the frontier "
+                         "picks the fastest point at or above it "
+                         "(docs/frontier.md)")
     ap.add_argument("--stream", type=int, default=0, metavar="K",
                     help="yield latent previews every K denoising steps "
                          "(0 = off)")
@@ -164,6 +184,8 @@ def main():
 def _drive(args, engine, server, ops, priorities, deadlines):
     use_scheduler = (args.deadline is not None
                      or args.step_budget is not None
+                     or args.energy_budget is not None
+                     or args.quality_floor is not None
                      or any(p != "standard" for p in priorities))
     sched = DeadlineScheduler(engine) if use_scheduler else None
     previews = 0
@@ -181,9 +203,16 @@ def _drive(args, engine, server, ops, priorities, deadlines):
             if sched is not None:
                 adm = sched.submit(priority=priorities[i % len(priorities)],
                                    deadline_s=deadlines[i % len(deadlines)],
-                                   step_budget=args.step_budget, **fields)
+                                   step_budget=args.step_budget,
+                                   energy_budget_j=args.energy_budget,
+                                   quality_floor=args.quality_floor,
+                                   **fields)
+                frontier = (f" precision={adm.precision} "
+                            f"taylorseer={adm.taylorseer} "
+                            f"quality={adm.quality:.3f}"
+                            if adm.action == "frontier" else "")
                 print(f"[admission] {adm.action}: op={adm.op} "
-                      f"steps={adm.steps}"
+                      f"steps={adm.steps}{frontier}"
                       + (f" ({adm.reason})" if adm.reason else ""))
             else:
                 engine.submit(**fields)
@@ -223,7 +252,10 @@ def _drive(args, engine, server, ops, priorities, deadlines):
               f"energy={r.energy_j:.2f}J (baseline {r.baseline_energy_j:.2f}J) "
               f"monitor_ber={r.monitor_ber:.2e}{miss}")
 
-    distinct = len({(r.op, r.mode, r.steps) for r in results})
+    # precision and taylorseer are SamplerKey dimensions too (the frontier
+    # may assign them per request), so they discriminate traced configs
+    distinct = len({(r.op, r.mode, r.steps, r.precision, r.taylorseer)
+                    for r in results})
     # Diffusion one-shot: one trace per distinct config; streamed OR
     # offloaded (offload runs the windowed sampler with the refresh
     # interval as the window): a window plus possibly a remainder window

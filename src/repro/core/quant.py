@@ -1,4 +1,6 @@
-"""Symmetric INT8 quantization with INT32 accumulation.
+"""Symmetric INT8 quantization with INT32 accumulation, plus the
+resilience-aware precision *plans* the serving frontier trades against
+steps/DVFS (DiffPro-style joint timestep + precision optimization).
 
 The paper (Sec 3.2) quantizes weights and input activations to INT8 and
 injects faults into the INT32 output accumulators, following SmoothQuant-style
@@ -8,16 +10,33 @@ quantized-GEMM path every DRIFT-protected matmul runs through.
 Bit convention: bit 0 is the LSB of the INT32 accumulator; "the 10th bit"
 threshold of the paper corresponds to ``threshold = 2**10`` on the
 de-scaled-integer domain.
+
+Precision plans (:class:`PrecisionPlan`, ``PRECISION_PLANS``) extend the
+Sec 5.2 resilience story to bit width: the error-*sensitive* sites the
+existing metrics rank (embedding/first-block GEMMs -- ``CLASS_EMBED`` /
+``CLASS_FIRST_BLOCK`` in ``core.dvfs`` -- and the first ``nominal_steps``
+timesteps) always stay at the baseline INT8, while the resilient body
+blocks on resilient timesteps may narrow to fewer bits. The default plan
+(``"int8"``) IS today's path -- no extra narrowing anywhere -- so code
+threading a plan through is bit-identical to pre-plan code unless a
+narrowed plan is explicitly chosen. Execution simulates narrowing at the
+model-output (eps) level via :func:`fake_quant` (the output-level
+simplification of layer-wise mixed precision, same level TaylorSeer
+caches at); the energy/latency accounting uses the layer-wise bit widths
+(``perfmodel.flops.mac_bit_energy_scale`` / ``mac_bit_time_scale``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 INT8_MAX = 127.0
+
+#: Baseline GEMM operand width: the paper's INT8 path.
+BASE_BITS = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,3 +110,88 @@ def quant_error_bound(k_dim: int) -> float:
     (127^2 * K < 2^31 for all assigned d_ff/d_model).
     """
     return INT8_MAX * INT8_MAX * k_dim
+
+
+# ---------------------------------------------------------------------------
+# Resilience-aware precision plans (the serving frontier's precision knob)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Per-block-class / per-timestep bit-width assignment.
+
+    ``body_bits`` applies to the resilient body blocks (``CLASS_BODY``) on
+    resilient timesteps (``step >= protect_steps``); ``sensitive_bits``
+    covers everything the resilience policy protects -- embeddings, the
+    first block, and the first ``protect_steps`` timesteps -- and is pinned
+    to the INT8 baseline (narrowing the sensitive sites is exactly what
+    Sec 4's characterization says not to do).
+    """
+    name: str
+    body_bits: int = BASE_BITS
+    sensitive_bits: int = BASE_BITS
+    # Leading timesteps that never narrow; mirrors the DVFS schedule's
+    # ``nominal_steps`` protection window. Rebind per engine via
+    # :meth:`with_protect_steps` so both protections share one constant.
+    protect_steps: int = 2
+
+    def __post_init__(self):
+        if not 2 <= self.body_bits <= BASE_BITS:
+            raise ValueError(
+                f"body_bits must be in [2, {BASE_BITS}], got {self.body_bits}")
+        if self.sensitive_bits != BASE_BITS:
+            raise ValueError(
+                "sensitive sites stay at the INT8 baseline "
+                f"(sensitive_bits={self.sensitive_bits})")
+
+    @property
+    def narrowed(self) -> bool:
+        """True when this plan actually narrows anything (the default
+        ``"int8"`` plan is a no-op: today's path, bit for bit)."""
+        return self.body_bits < BASE_BITS
+
+    def with_protect_steps(self, n: int) -> "PrecisionPlan":
+        return dataclasses.replace(self, protect_steps=int(n))
+
+
+#: The plan ladder the serving frontier enumerates, widest first. "int8"
+#: is the degenerate plan (today's path); the narrowed plans keep the
+#: sensitive sites at INT8 and drop only the resilient body.
+PRECISION_PLANS: Dict[str, PrecisionPlan] = {
+    "int8": PrecisionPlan("int8", body_bits=8),
+    "int8-body6": PrecisionPlan("int8-body6", body_bits=6),
+    "int8-body4": PrecisionPlan("int8-body4", body_bits=4),
+}
+
+DEFAULT_PLAN = PRECISION_PLANS["int8"]
+
+
+def get_plan(name: str) -> PrecisionPlan:
+    """Plan registry lookup with a reasoned error for unknown names."""
+    plan = PRECISION_PLANS.get(name)
+    if plan is None:
+        raise ValueError(f"unknown precision plan {name!r}; one of "
+                         f"{tuple(PRECISION_PLANS)}")
+    return plan
+
+
+def fake_quant(x: jax.Array, bits: int) -> jax.Array:
+    """Symmetric fake quantization to ``bits`` (quantize-dequantize).
+
+    The execution-level proxy for running the resilient body at a narrower
+    operand width: round-trip the tensor through a ``2**(bits-1) - 1``-level
+    symmetric grid (per-tensor scale, same convention as :func:`quantize`).
+    Deterministic and monotone: fewer bits -> coarser grid -> more noise.
+    """
+    levels = float(2 ** (int(bits) - 1) - 1)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-8) / levels
+    return jnp.clip(jnp.round(x / scale), -levels, levels) * scale
+
+
+def quant_noise(bits: int) -> float:
+    """Relative quantization step size of a ``bits``-wide symmetric grid:
+    ``2**-(bits-1)``. The frontier's quality proxy charges the *excess*
+    over the INT8 baseline (``quant_noise(b) - quant_noise(8)``), which is
+    exactly 0 for the default plan."""
+    return 2.0 ** (-(int(bits) - 1))

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dvfs as dvfs_lib
+from repro.core import quant as quant_lib
 from repro.core.exec_ctx import DriftSystemConfig, ExecContext
 from repro.diffusion import schedule as sched_lib
 from repro.diffusion import taylorseer as ts_lib
@@ -57,6 +58,12 @@ class SamplerConfig:
     schedule: Optional[dvfs_lib.DvfsSchedule] = None   # None -> error-free
     taylorseer: ts_lib.TaylorSeerConfig = dataclasses.field(
         default_factory=lambda: ts_lib.TaylorSeerConfig(enabled=False))
+    # Resilience-aware precision plan (core.quant.PRECISION_PLANS): the
+    # default "int8" plan is a strict no-op (no extra op in the trace), so
+    # pre-plan samplers are bit-identical. Narrowed plans fake-quantize
+    # the denoiser output on resilient timesteps (step >= protect_steps)
+    # -- the output-level simplification of layer-wise mixed precision.
+    precision: quant_lib.PrecisionPlan = quant_lib.DEFAULT_PLAN
     monitor_target_ber: float = 3e-3
     # Fig 6 block-level study: per-layer / embed BER multipliers
     layer_gate: Optional[Any] = None
@@ -202,6 +209,15 @@ def _make_step_fn(model_cfg: ModelConfig, cfg: SamplerConfig, sched,
                 do_compute, do_forecast, operand=None)
         else:
             eps, stores2, taylor2, corr, detected, ran = do_compute(None)
+
+        if cfg.precision.narrowed:
+            # Narrowed precision plan: fake-quantize the denoiser output on
+            # resilient timesteps only; the first ``protect_steps`` steps
+            # stay full-width (the same protection window the DVFS schedule
+            # gives ``nominal_steps``). Python-gated, so the default plan
+            # adds nothing to the trace.
+            qeps = quant_lib.fake_quant(eps, cfg.precision.body_bits)
+            eps = jnp.where(i >= cfg.precision.protect_steps, qeps, eps)
 
         n_words = max(int(np.prod(latents.shape)), 1)
         mon2 = dvfs_lib.ber_monitor_update(

@@ -24,6 +24,13 @@ clock and jointly picks its (operating point, step count) -- urgent
 requests get overclocked or step-trimmed, hopeless ones are rejected,
 background ones keep the energy-saving ladder. See docs/scheduler.md.
 
+``--energy-budget`` / ``--quality-floor`` state a compute-optimal
+objective: the scheduler resolves the request against the joint
+(steps x precision x TaylorSeer x DVFS) Pareto frontier
+(``serving.frontier``) and rewrites all four knobs -- min-energy meeting
+the deadline, min-latency at/above the floor, or max-quality inside the
+budget. See docs/frontier.md.
+
 ``--stream K`` streams each batch: a latent preview is yielded for every
 live request after each K denoising steps, before the final results --
 final latents are bit-identical to the unstreamed path.
@@ -55,6 +62,7 @@ from repro.serving import (DeadlineScheduler, DriftServeEngine,
                            EngineTelemetry, OffloadConfig, PreviewEvent,
                            ShardedDriftServeEngine, make_engine,
                            serve_telemetry)
+from repro.core.quant import PRECISION_PLANS
 from repro.serving.request import REQUEST_OPS, REQUEST_PRIORITIES
 from repro.serving.servable import PARADIGM_BY_FAMILY, paradigm_for
 
@@ -147,6 +155,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "layout; finals stay bit-identical -- see "
                          "docs/offload.md)")
     ap.add_argument("--taylorseer", action="store_true")
+    ap.add_argument("--precision", default="int8",
+                    choices=sorted(PRECISION_PLANS),
+                    help="precision plan for the resilient denoiser body "
+                         "(core.quant.PRECISION_PLANS); 'int8' is the "
+                         "baseline path bit for bit. Usually left to the "
+                         "frontier (--energy-budget/--quality-floor) but "
+                         "requestable directly like --op")
     ap.add_argument("--priority", default="standard",
                     choices=list(REQUEST_PRIORITIES),
                     help="scheduling class for all submitted requests; "
@@ -161,6 +176,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="cap denoising steps per request (DiffPro-style "
                          "quality/latency knob; the scheduler may trim "
                          "further for a deadline)")
+    ap.add_argument("--energy-budget", type=float, default=None,
+                    metavar="J",
+                    help="per-request energy budget in Joules (perfmodel "
+                         "attribution); routes admission through the "
+                         "compute-optimal (steps x precision x TaylorSeer "
+                         "x DVFS) frontier -- min-energy meeting the "
+                         "deadline, or max-quality inside the budget "
+                         "without one (docs/frontier.md)")
+    ap.add_argument("--quality-floor", type=float, default=None,
+                    metavar="Q",
+                    help="minimum acceptable quality proxy in (0, 1] "
+                         "(1.0 = as-requested fidelity); frontier "
+                         "admission picks the fastest point at or above "
+                         "the floor (docs/frontier.md)")
     ap.add_argument("--stream", type=int, default=0, metavar="K",
                     help="stream a latent preview every K denoising steps "
                          "(0 = off); final latents are bit-identical to "
@@ -223,11 +252,14 @@ def main(argv: Optional[Sequence[str]] = None,
 def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
     use_scheduler = (args.deadline is not None
                      or args.priority != "standard"
-                     or args.step_budget is not None)
+                     or args.step_budget is not None
+                     or args.energy_budget is not None
+                     or args.quality_floor is not None)
     sched = DeadlineScheduler(eng) if use_scheduler else None
     mode = args.mode if args.mode is not None else default_mode_for(args.arch)
     fields = dict(arch=args.arch, smoke=args.smoke, steps=args.steps,
                   mode=mode, op=args.op, taylorseer=args.taylorseer,
+                  precision=args.precision,
                   rollback_interval=args.rollback_interval)
     # Hold the server's engine lock from first submission through the
     # drain: a concurrent /events client gets a clean 503 instead of
@@ -240,9 +272,18 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
                 adm = sched.submit(seed=args.seed + i,
                                    priority=args.priority,
                                    deadline_s=args.deadline,
-                                   step_budget=args.step_budget, **fields)
+                                   step_budget=args.step_budget,
+                                   energy_budget_j=args.energy_budget,
+                                   quality_floor=args.quality_floor,
+                                   **fields)
+                knobs = f"op {adm.op}, {adm.steps} steps"
+                if adm.action == "frontier":
+                    knobs += (f", {adm.precision}, taylorseer "
+                              f"{'on' if adm.taylorseer else 'off'}, "
+                              f"quality {adm.quality:.3f}, "
+                              f"{adm.projected_energy_j:.2f}J projected")
                 print(f"[admission] req {adm.request_id}: {adm.action} "
-                      f"(op {adm.op}, {adm.steps} steps)"
+                      f"({knobs})"
                       + (f" -- {adm.reason}" if adm.reason else ""))
             else:
                 eng.submit(seed=args.seed + i, **fields)
@@ -304,8 +345,8 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
         s = sched.stats
         print(f"  scheduler: {s.admitted}/{s.submitted} admitted "
               f"({s.rejected} rejected, {s.escalated_op} op-escalated, "
-              f"{s.trimmed_steps} step-trimmed, {s.projected_misses} "
-              f"projected misses)")
+              f"{s.trimmed_steps} step-trimmed, {s.frontier_selected} "
+              f"frontier-selected, {s.projected_misses} projected misses)")
     tele = eng.telemetry
     if tele.enabled:
         ctrl = tele.controller

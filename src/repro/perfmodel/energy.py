@@ -40,6 +40,12 @@ class RunConfig:
     ckpt_interval: int = DEFAULT_INTERVAL
     embed_mac_fraction: float = 0.02     # embeds' share of per-step MACs
     taylorseer_interval: int = 0         # 0 = disabled
+    # Operand width of the resilient body blocks on aggressive steps
+    # (core.quant.PrecisionPlan.body_bits); 8 = the INT8 baseline, priced
+    # (and computed) identically to the pre-precision-plan model. The
+    # protected fraction (embeds/first block, first nominal_steps) always
+    # runs at the baseline width, mirroring the DVFS schedule's protection.
+    body_bits: int = 8
     recovery_tiles_per_step: float = 0.0  # from simulation stats
     repacked_layout: bool = True
 
@@ -115,9 +121,14 @@ def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
     vf2 = (rc.aggressive.voltage / v0) ** 2
     e_mac = em.e_mac_pj * 1e-12
 
-    # on-die energy (V^2-scaled for the aggressive fraction)
+    # on-die energy (V^2-scaled for the aggressive fraction; narrowed
+    # body operands additionally scale e_mac ~ (bits/8)^2 -- exactly 1.0
+    # at the INT8 baseline, so a default precision plan prices identically)
+    bscale_e = flops_lib.mac_bit_energy_scale(rc.body_bits)
+    bscale_t = flops_lib.mac_bit_time_scale(rc.body_bits)
     e_die_nom = macs_step * e_mac * (1 + abft)
-    e_die_agg = macs_step * e_mac * (1 + abft) * (emb + (1 - emb) * vf2)
+    e_die_agg = macs_step * e_mac * (1 + abft) \
+        * (emb + (1 - emb) * vf2 * bscale_e)
     e_die = n_nom * e_die_nom + n_agg * e_die_agg
 
     # DRAM device energy + DRIFT overheads (ckpt writes 1/n + recovery reads)
@@ -128,10 +139,11 @@ def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
     e_dram = (len(computed) * dram_step + ckpt_bytes + recov_bytes) \
         * em.e_dram_pj_per_byte * 1e-12
 
-    # latency: compute-bound, DVFS frequency scaling
+    # latency: compute-bound, DVFS frequency scaling; narrowed body
+    # operands stream faster through the systolic array (~ bits/8)
     t_nom = macs_step / (hw.peak_macs_per_s * em.utilization)
     f_ratio = hw.freq_ghz / rc.aggressive.freq_ghz
-    t_agg = t_nom * (emb + (1 - emb) * f_ratio)
+    t_agg = t_nom * (emb + (1 - emb) * f_ratio * bscale_t)
     latency = n_nom * t_nom + n_agg * t_agg
     e_static = em.static_w * latency * (rc.aggressive.voltage / v0)
 

@@ -102,6 +102,23 @@ def cell_flops(cfg: ModelConfig, shape: shapes_lib.ShapeSpec) -> Dict[str, float
     raise ValueError(shape.kind)
 
 
+def mac_bit_energy_scale(bits: int, base_bits: int = 8) -> float:
+    """On-die energy per MAC at a narrowed operand width, relative to the
+    INT8 baseline: multiplier area/energy grows with the product of operand
+    widths, so e_mac ~ (bits/8)^2. Exactly 1.0 at the baseline width --
+    the degenerate precision plan prices (and computes) identically to the
+    pre-plan path."""
+    return (bits / base_bits) ** 2
+
+
+def mac_bit_time_scale(bits: int, base_bits: int = 8) -> float:
+    """MAC time at a narrowed operand width relative to INT8: a
+    weight-stationary systolic array streams ``bits``-wide operands, so
+    throughput scales ~ 1/bits (int4 packs two ops where int8 packs one).
+    Exactly 1.0 at the baseline width."""
+    return bits / base_bits
+
+
 #: nominal decode context length the per-token serving cost is quoted at
 #: (KV reads grow with position; the engine charges a fixed mid-stream
 #: context so batch cost stays affine in step count like diffusion).

@@ -21,7 +21,11 @@ with each micro-batch sharded across a device mesh -- see
 
 ``DeadlineScheduler`` wraps either engine with admission control, a joint
 (DVFS operating point, step budget) policy, and priority-bucketed batch
-formation -- see ``repro.serving.scheduler`` and docs/scheduler.md::
+formation -- see ``repro.serving.scheduler`` and docs/scheduler.md.
+Requests stating an ``energy_budget_j``/``quality_floor`` objective
+resolve against the precomputed compute-optimal (steps x precision x
+TaylorSeer x DVFS) Pareto frontier instead (``repro.serving.frontier``,
+docs/frontier.md)::
 
     from repro.serving import DeadlineScheduler
 
@@ -70,6 +74,9 @@ from repro.serving.engine import OP_BY_NAME, DriftServeEngine, EngineStats
 from repro.serving.request import (PRIORITY_RANK, REQUEST_OPS,
                                    REQUEST_PRIORITIES, GenerationRequest,
                                    PreviewEvent, RequestQueue, RequestResult)
+from repro.serving.frontier import (FRONTIER_OPS, FrontierBuilder,
+                                    FrontierPoint, dominates, pareto_front,
+                                    quality_proxy)
 from repro.serving.scheduler import (Admission, DeadlineScheduler,
                                      PriorityMicroBatcher, SchedulerConfig,
                                      SchedulerStats)
@@ -94,6 +101,8 @@ __all__ = [
     "CompiledSamplerCache", "SamplerKey",
     "DeadlineScheduler", "PriorityMicroBatcher", "SchedulerConfig",
     "SchedulerStats", "Admission",
+    "FrontierBuilder", "FrontierPoint", "FRONTIER_OPS", "pareto_front",
+    "dominates", "quality_proxy",
     "OffloadConfig", "OffloadStats", "OffloadStore", "OffloadPlanner",
     "IntervalPlan",
     "EngineTelemetry", "MetricsRegistry", "LatencyEstimator",

@@ -82,6 +82,7 @@ def request_key(req: GenerationRequest, bucket: int, resolved_op: str,
                      op="" if req.mode == "clean" else resolved_op,
                      bucket=bucket,
                      taylorseer=req.taylorseer,
+                     precision=req.precision,
                      rollback_interval=interval)
     return dataclasses.replace(key, **extra) if extra else key
 

@@ -30,6 +30,12 @@ class SamplerKey:
     op: str            # operating-point name; "" when no DVFS schedule
     bucket: int        # compiled batch size
     taylorseer: bool = False
+    # Precision-plan name (core.quant.PRECISION_PLANS). "int8" is the
+    # degenerate plan whose sampler trace is byte-identical to a pre-plan
+    # build; narrowed plans add a fake-quant op, so they need their own
+    # compiled fn. The clean-reference path normalizes this back to "int8"
+    # (references are always scored at full width).
+    precision: str = "int8"
     # Always a concrete int here: "auto" requests resolve through the
     # offload planner (engine.auto_rollback_interval) before keying.
     rollback_interval: int = DEFAULT_INTERVAL

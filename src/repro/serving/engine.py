@@ -539,6 +539,8 @@ class DriftServeEngine:
                 op=key.op or "nominal",
                 mode=key.mode,
                 steps=key.steps,
+                taylorseer=key.taylorseer,
+                precision=key.precision,
                 batch_corrected_elems=corrected,
                 n_model_evals=nevals,
                 energy_j=cost["energy_j"],

@@ -26,12 +26,19 @@ import collections
 import dataclasses
 from typing import Deque, List, Optional, Union
 
+from repro.core.dvfs import OP_LADDER
 from repro.core.exec_ctx import MODES
+from repro.core.quant import PRECISION_PLANS
 from repro.core.rollback import DEFAULT_INTERVAL
 
 # Operating points a request may name; "auto" resolves against the engine's
-# BER-monitor ladder at batch-formation time.
-REQUEST_OPS = ("nominal", "undervolt", "overclock", "auto")
+# BER-monitor ladder at batch-formation time. The intermediate ladder
+# points (uv-mild/uv-safe/near-nominal) are requestable too -- the
+# scheduler's frontier resolution assigns them, and anything the engine
+# can be assigned a user may also ask for directly.
+REQUEST_OPS = ("nominal", "undervolt", "overclock", "auto") + tuple(
+    p.name for p in OP_LADDER
+    if p.name not in ("nominal", "undervolt", "overclock"))
 
 # Scheduling classes, most to least urgent. The priority batcher serves
 # "interactive" buckets before "standard" before "background"; within a
@@ -52,6 +59,12 @@ class GenerationRequest:
     op: str = "undervolt"          # REQUEST_OPS member
     seed: int = 0                  # drives this request's initial latents
     taylorseer: bool = False
+    # Precision-plan name (core.quant.PRECISION_PLANS). "int8" is the
+    # baseline (today's path, bit for bit); narrowed plans drop the
+    # resilient body blocks to fewer bits on resilient timesteps. Usually
+    # chosen by the scheduler's frontier resolution, but requestable
+    # directly like ``op``.
+    precision: str = "int8"
     # Checkpoint-refresh cadence for rollback-ABFT. An int pins it;
     # "auto" defers to the engine's offload planner, which picks the
     # interval per (arch, op, steps, bucket) from the perfmodel and the
@@ -68,6 +81,15 @@ class GenerationRequest:
     # The engine clamps ``steps`` to it at submit(); the scheduler may trim
     # further (never below its ``min_steps``) to meet a deadline.
     step_budget: Optional[int] = None
+    # Energy budget in Joules for this request's share of its batch; None =
+    # unconstrained. With a deadline, the scheduler's frontier resolution
+    # picks the minimum-energy frontier point meeting the deadline (the
+    # budget filters candidates); alone, it caps the frontier search.
+    energy_budget_j: Optional[float] = None
+    # Minimum acceptable quality proxy in (0, 1] (serving.frontier's scale,
+    # 1.0 = as-requested full fidelity); None = no floor. Triggers frontier
+    # resolution: minimum-latency point at or above the floor.
+    quality_floor: Optional[float] = None
     # Engine virtual-clock stamp at submission; set by the engine, used for
     # deadline-miss accounting and scheduler aging. Not a user field.
     submitted_at_s: float = 0.0
@@ -88,6 +110,17 @@ class GenerationRequest:
         if self.step_budget is not None and self.step_budget < 1:
             raise ValueError(
                 f"step_budget must be >= 1, got {self.step_budget}")
+        if self.precision not in PRECISION_PLANS:
+            raise ValueError(
+                f"unknown precision plan {self.precision!r}; one of "
+                f"{tuple(PRECISION_PLANS)}")
+        if self.energy_budget_j is not None and self.energy_budget_j <= 0:
+            raise ValueError(
+                f"energy_budget_j must be > 0, got {self.energy_budget_j}")
+        if self.quality_floor is not None and not (
+                0.0 < self.quality_floor <= 1.0):
+            raise ValueError(
+                f"quality_floor must be in (0, 1], got {self.quality_floor}")
         if isinstance(self.rollback_interval, str):
             if self.rollback_interval != "auto":
                 raise ValueError(
@@ -147,6 +180,10 @@ class RequestResult:
     # BER-monitor state after this request's batch
     monitor_ber: float
     monitor_op_index: int
+    # knobs the batch actually ran under (frontier resolution may have
+    # chosen them; as-requested runs echo the request's fields)
+    taylorseer: bool = False
+    precision: str = "int8"
     # this request's generated sample: its slot of the batch output latents,
     # clipped to [-1, 1], shape (H, W, C). Optional so metric-only fakes in
     # tests stay cheap; the real engine always fills it.

@@ -55,6 +55,8 @@ from typing import Callable, Dict, Optional, Tuple
 from repro.core import dvfs as dvfs_lib
 from repro.core import rollback as rollback_lib
 from repro.perfmodel import energy
+from repro.serving import frontier as frontier_lib
+from repro.serving import servable as servable_lib
 from repro.serving.batcher import MicroBatch, MicroBatcher, request_key
 from repro.serving.engine import OP_BY_NAME, DriftServeEngine
 from repro.serving.request import (PRIORITY_RANK, GenerationRequest,
@@ -89,8 +91,8 @@ class Admission:
     # rejected ones, for the record).
     op: str
     steps: int
-    # "as-requested" | "escalated-op" | "trimmed-steps" | "projected-miss"
-    # | "rejected"
+    # "as-requested" | "escalated-op" | "trimmed-steps" | "frontier"
+    # | "projected-miss" | "rejected"
     action: str
     # Projected wait behind the existing queue and projected completion
     # latency (wait + own batch), both in engine virtual seconds. None
@@ -99,6 +101,14 @@ class Admission:
     projected_total_s: Optional[float] = None
     request_id: int = -1           # -1 = rejected, never enqueued
     reason: str = ""
+    # Frontier-chosen knobs beyond (op, steps); ladder decisions echo the
+    # request's own fields so the submit rewrite is uniform.
+    precision: str = "int8"
+    taylorseer: bool = False
+    # Frontier projections (None for ladder decisions): the picked
+    # point's per-request energy share and quality proxy.
+    projected_energy_j: Optional[float] = None
+    quality: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -108,6 +118,7 @@ class SchedulerStats:
     rejected: int = 0
     escalated_op: int = 0          # op bumped to overclock for a deadline
     trimmed_steps: int = 0         # step budget cut for a deadline
+    frontier_selected: int = 0     # compute-optimal frontier picks
     projected_misses: int = 0      # admitted although projected to miss
 
 
@@ -183,6 +194,11 @@ class DeadlineScheduler:
         # batch; the estimator lookup is O(1) anyway).
         self._latency_cache: Dict[
             Tuple[str, float, float, int, int, int], float] = {}
+        # Compute-optimal frontier builder (serving/frontier.py), built
+        # lazily against the engine's energy model so deadline-only
+        # workloads never pay the calibration.
+        self._frontier_builder: Optional[frontier_lib.FrontierBuilder] = \
+            None
 
     # ------------------------------------------------------------- intake
     def submit(self, **fields) -> Admission:
@@ -209,27 +225,56 @@ class DeadlineScheduler:
             self.stats.escalated_op += 1
         elif adm.action == "trimmed-steps":
             self.stats.trimmed_steps += 1
+        elif adm.action == "frontier":
+            self.stats.frontier_selected += 1
         elif adm.action == "projected-miss":
             self.stats.projected_misses += 1
-        rid = eng.submit(**{**fields, "op": adm.op, "steps": adm.steps})
+        rewrite = {**fields, "op": adm.op, "steps": adm.steps}
+        if adm.action == "frontier":
+            # the frontier owns ALL four knobs; ladder decisions leave the
+            # request's own precision/taylorseer untouched
+            rewrite["precision"] = adm.precision
+            rewrite["taylorseer"] = adm.taylorseer
+        rid = eng.submit(**rewrite)
         return dataclasses.replace(adm, request_id=rid)
 
     # ------------------------------------------------------------- policy
     def plan(self, req: GenerationRequest) -> Admission:
         """Joint (operating point, step count) assignment for one request.
 
-        Policy ladder, cheapest first (see docs/scheduler.md for the
+        Requests stating a frontier objective (``energy_budget_j`` /
+        ``quality_floor``) resolve against the compute-optimal
+        (steps x precision x TaylorSeer x DVFS) Pareto frontier first --
+        minimum energy meeting the deadline, minimum latency meeting the
+        quality floor, or maximum quality inside the budget -- and fall
+        back to the PR 3 ladder when no frontier point qualifies.
+
+        The ladder, cheapest first (see docs/scheduler.md for the
         table): as-requested -> overclock at full steps -> overclock with
         trimmed steps -> reject / projected-miss.
         """
         cap = req.steps if req.step_budget is None \
             else min(req.steps, req.step_budget)
+        wants_frontier = (req.energy_budget_j is not None
+                          or req.quality_floor is not None)
         if req.deadline_s is None:
+            if wants_frontier:
+                adm = self._plan_frontier(req, cap, wait=None, budget=None)
+                if adm is not None:
+                    return adm
             # No deadline: never touch the energy-saving assignment.
+            # (Unsatisfiable floor/budget falls through here too --
+            # best-effort as-requested, documented in docs/frontier.md.)
             return Admission(admitted=True, op=req.op, steps=cap,
                              action="as-requested")
         wait = self.projected_wait_s(req)
         budget = req.deadline_s - wait     # time left for the own batch
+        if wants_frontier:
+            adm = self._plan_frontier(req, cap, wait=wait, budget=budget)
+            if adm is not None:
+                return adm
+            # no qualifying frontier point: the existing escalation
+            # ladder decides (including reject / projected-miss)
         disc = self._discriminators(req)
         candidates = [(req.op, cap, "as-requested")]
         if self._concrete_op(req.op) != "overclock":
@@ -261,6 +306,85 @@ class DeadlineScheduler:
                          projected_total_s=wait + lat,
                          reason="admitted past its deadline "
                                 "(reject_hopeless=False)")
+
+    # ----------------------------------------------------------- frontier
+    def frontier_builder(self) -> frontier_lib.FrontierBuilder:
+        """The scheduler's (lazily built) frontier enumerator -- public so
+        tests and benchmarks sweep the same memoized frontiers admission
+        consults."""
+        if self._frontier_builder is None:
+            eng = self.engine
+            self._frontier_builder = frontier_lib.FrontierBuilder(
+                em=eng._energy_model_for(),
+                nominal_steps=eng.nominal_steps,
+                min_steps=self.cfg.min_steps)
+        return self._frontier_builder
+
+    def frontier_latency_s(self, req: GenerationRequest,
+                           point: frontier_lib.FrontierPoint) -> float:
+        """A frontier point's completion latency as the engine will bill
+        it: the point's full-bucket perfmodel latency plus the residual
+        offload stall for this configuration (0.0 offload-free)."""
+        return point.latency_s + self.engine.offload_stall_s(
+            req.arch, point.op, point.steps,
+            self.engine.resolve_interval(req), req.mode)
+
+    def _plan_frontier(self, req: GenerationRequest, cap: int,
+                       wait: Optional[float],
+                       budget: Optional[float]) -> Optional[Admission]:
+        """Frontier resolution step: pick the compute-optimal knob point
+        for a request with an ``energy_budget_j``/``quality_floor``
+        objective, or None when no point qualifies (the caller falls back
+        to the escalation ladder).
+
+        Selection is provably optimal over the FULL knob space even
+        though only the pruned Pareto set is searched: every constraint
+        here is monotone in the objectives (deadline/budget cap two
+        minimized axes, the floor bounds the maximized one), so any
+        feasible dominated point has a dominating frontier point that is
+        also feasible and at least as good under every objective below
+        -- the brute-force equivalence test in tests/test_frontier.py
+        checks exactly this.
+        """
+        if servable_lib.paradigm_for(req.arch) != "diffusion":
+            # AR requests reject these knobs at engine.submit with a
+            # reasoned error; never consult a diffusion frontier for them.
+            return None
+        eng = self.engine
+        points = self.frontier_builder().frontier(
+            eng._full_cfg(req.arch), cap, eng.batcher.bucket, req.mode,
+            eng.resolve_interval(req))
+        lat = {p: self.frontier_latency_s(req, p) for p in points}
+        ok = [p for p in points
+              if (req.quality_floor is None
+                  or p.quality >= req.quality_floor - 1e-12)
+              and (req.energy_budget_j is None
+                   or p.energy_j <= req.energy_budget_j + 1e-12)
+              and (budget is None or lat[p] <= budget)]
+        if not ok:
+            return None
+        if budget is not None:
+            # deadline-constrained: cheapest energy that makes it in time
+            objective = "min-energy"
+            pick = min(ok, key=lambda p: (p.energy_j, -p.quality, lat[p],
+                                          frontier_lib.sort_key(p)))
+        elif req.quality_floor is not None:
+            # quality floor, no deadline: fastest point at/above the floor
+            objective = "min-latency"
+            pick = min(ok, key=lambda p: (lat[p], -p.quality, p.energy_j,
+                                          frontier_lib.sort_key(p)))
+        else:
+            # budget only: best quality the budget buys
+            objective = "max-quality"
+            pick = min(ok, key=lambda p: (-p.quality, p.energy_j, lat[p],
+                                          frontier_lib.sort_key(p)))
+        eng.telemetry.on_frontier_choice(objective, len(points))
+        return Admission(
+            admitted=True, op=pick.op, steps=pick.steps, action="frontier",
+            projected_wait_s=wait,
+            projected_total_s=None if wait is None else wait + lat[pick],
+            precision=pick.precision, taylorseer=pick.taylorseer,
+            projected_energy_j=pick.energy_j, quality=pick.quality)
 
     # --------------------------------------------------------- projection
     def projected_wait_s(self, req: GenerationRequest) -> float:
@@ -298,7 +422,8 @@ class DeadlineScheduler:
         planner here, so projections price the interval that will actually
         run -- the same single-resolution contract as ``op="auto"``."""
         return {"mode": req.mode, "taylorseer": req.taylorseer,
-                "rollback_interval": self.engine.resolve_interval(req)}
+                "rollback_interval": self.engine.resolve_interval(req),
+                "precision": req.precision}
 
     def batch_latency_s(self, arch: str, op_name: str, steps: int,
                         **disc) -> float:

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import dvfs as dvfs_lib
 from repro.core import metrics
+from repro.core import quant as quant_lib
 from repro.core.exec_ctx import DriftSystemConfig
 from repro.core.rollback import RollbackConfig
 from repro.diffusion import sampler as sampler_lib
@@ -201,6 +202,10 @@ class DiffusionServable(ServableModel):
                 rollback=RollbackConfig(interval=key.rollback_interval)),
             schedule=schedule,
             taylorseer=TaylorSeerConfig(enabled=key.taylorseer),
+            # protect_steps rides the engine's nominal_steps so the
+            # precision protection window matches the DVFS one
+            precision=quant_lib.get_plan(key.precision).with_protect_steps(
+                eng.nominal_steps),
             monitor_target_ber=eng.monitor_target_ber)
         return eng._sampler_factory(key, model_cfg, scfg,
                                     eng.cache.note_trace)
@@ -212,7 +217,10 @@ class DiffusionServable(ServableModel):
         eng = self.eng
         # stream=0: previews never need a reference, and streamed finals
         # are bit-identical to one-shot, so both share one clean sample.
-        ckey = dataclasses.replace(key, mode="clean", op="", stream=0)
+        # precision="int8": references are always full-width -- a narrowed
+        # run is scored against the error-free full-precision sample.
+        ckey = dataclasses.replace(key, mode="clean", op="", stream=0,
+                                   precision="int8")
         sample_id = (ckey, seeds)
         cached = eng._clean_samples.get(sample_id)
         if cached is not None:
@@ -324,6 +332,7 @@ class DiffusionServable(ServableModel):
             ckpt_interval=key.rollback_interval if protected else 10 ** 9,
             abft_enabled=protected,
             taylorseer_interval=3 if key.taylorseer else 0,
+            body_bits=quant_lib.get_plan(key.precision).body_bits,
             recovery_tiles_per_step=corrected / max(key.steps, 1)
             / (32 * 32))
         per_slot = []
@@ -367,6 +376,21 @@ class AutoregressiveServable(ServableModel):
                 "TaylorSeer caches diffusion denoiser features across "
                 "timesteps and does not apply to token decoding. Drop the "
                 "flag (or serve a dit/unet arch).")
+        if fields.get("precision", "int8") != "int8":
+            raise ValueError(
+                f"request for AR arch {arch!r} sets precision="
+                f"{fields['precision']!r}: precision plans narrow the "
+                "diffusion denoiser body per timestep and do not apply to "
+                "token decoding. Use the default 'int8' (or serve a "
+                "dit/unet arch).")
+        if fields.get("energy_budget_j") is not None \
+                or fields.get("quality_floor") is not None:
+            raise ValueError(
+                f"request for AR arch {arch!r} sets a frontier objective "
+                "(energy_budget_j/quality_floor): the compute-optimal "
+                "frontier enumerates diffusion knobs (steps x precision x "
+                "TaylorSeer x DVFS) and is not built for autoregressive "
+                "serving. Use deadline_s/step_budget instead.")
         mode = fields.get("mode", "drift")
         if mode not in self.ALLOWED_MODES:
             raise ValueError(

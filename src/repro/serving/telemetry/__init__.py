@@ -165,6 +165,13 @@ class EngineTelemetry:
             "drift_projection_source_total",
             "Latency source used for admission projections",
             label_names=("source",))
+        self._m_frontier = r.counter(
+            "drift_frontier_choices_total",
+            "Frontier points selected by the scheduler's compute-optimal "
+            "resolution", label_names=("objective",))
+        self._m_frontier_size = r.gauge(
+            "drift_frontier_size",
+            "Pareto-frontier size of the last consulted (arch, bucket)")
         # checkpoint-offload subsystem (repro.serving.offload)
         self._m_off_commits = r.counter(
             "drift_offload_commits_total",
@@ -220,7 +227,8 @@ class EngineTelemetry:
             latency_s=latency_s, clock_s=clock_s,
             batch_index=results[0].batch_index if results else -1,
             mode=key.mode, taylorseer=key.taylorseer,
-            rollback_interval=key.rollback_interval))
+            rollback_interval=key.rollback_interval,
+            precision=key.precision))
         self._m_obs.inc()
         self._m_est_keys.set(len(self.estimator))
         if monitored and self.controller is not None:
@@ -272,6 +280,14 @@ class EngineTelemetry:
         scheduler projection."""
         if self.enabled:
             self._m_projection.labels(source=source).inc()
+
+    def on_frontier_choice(self, objective: str, frontier_size: int) -> None:
+        """One compute-optimal frontier selection by the scheduler.
+        ``objective``: "min-energy" (deadline-constrained) |
+        "min-latency" (quality-floor) | "max-quality" (budget-only)."""
+        if self.enabled:
+            self._m_frontier.labels(objective=objective).inc()
+            self._m_frontier_size.set(frontier_size)
 
     # ------------------------------------------------------------ queries
     def clamp_ladder_index(self, op_index: int) -> int:

@@ -44,13 +44,14 @@ from repro.core.rollback import DEFAULT_INTERVAL
 from repro.serving.telemetry.metrics import nearest_rank
 
 # (arch, resolved operating-point name, steps, bucket, mode, taylorseer,
-# rollback_interval): everything that changes a batch's billed latency.
-# The first four mirror the scheduler's perfmodel pricing signature; the
-# last three keep differently-billed batches (a clean-mode batch pays no
-# ABFT/checkpoint overhead, TaylorSeer skips model evals, the rollback
-# interval scales checkpoint DRAM traffic) from contaminating each
-# other's learned estimates.
-LatencyKey = Tuple[str, str, int, int, str, bool, int]
+# rollback_interval, precision): everything that changes a batch's billed
+# latency. The first four mirror the scheduler's perfmodel pricing
+# signature; the rest keep differently-billed batches (a clean-mode batch
+# pays no ABFT/checkpoint overhead, TaylorSeer skips model evals, the
+# rollback interval scales checkpoint DRAM traffic, a narrowed precision
+# plan streams the body faster) from contaminating each other's learned
+# estimates.
+LatencyKey = Tuple[str, str, int, int, str, bool, int, str]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,11 +67,12 @@ class BatchObservation:
     mode: str = "drift"
     taylorseer: bool = False
     rollback_interval: int = DEFAULT_INTERVAL
+    precision: str = "int8"
 
     @property
     def key(self) -> LatencyKey:
         return (self.arch, self.op, self.steps, self.bucket, self.mode,
-                self.taylorseer, self.rollback_interval)
+                self.taylorseer, self.rollback_interval, self.precision)
 
 
 class _KeyModel:
@@ -124,12 +126,13 @@ class LatencyEstimator:
     @staticmethod
     def key_for(arch: str, op: str, steps: int, bucket: int,
                 mode: str = "drift", taylorseer: bool = False,
-                rollback_interval: int = DEFAULT_INTERVAL) -> LatencyKey:
+                rollback_interval: int = DEFAULT_INTERVAL,
+                precision: str = "int8") -> LatencyKey:
         """The full latency key; the trailing discriminators default to
         ``GenerationRequest``'s defaults so plain (arch, op, steps,
         bucket) queries mean the standard drift configuration."""
         return (arch, op, steps, bucket, mode, taylorseer,
-                rollback_interval)
+                rollback_interval, precision)
 
     def n_observations(self, arch: str, op: str, steps: int, bucket: int,
                        **disc) -> int:

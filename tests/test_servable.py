@@ -61,6 +61,16 @@ def _check_submit_validation(eng):
                    taylorseer=True)
     with pytest.raises(ValueError, match="mode='drift'"):
         eng.submit(arch=AR_ARCH, steps=STEPS, mode="drift")
+    # diffusion-only frontier knobs: reasoned rejections, not key errors
+    with pytest.raises(ValueError, match="precision"):
+        eng.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+                   precision="int8-body4")
+    with pytest.raises(ValueError, match="frontier"):
+        eng.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+                   energy_budget_j=1.0)
+    with pytest.raises(ValueError, match="frontier"):
+        eng.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+                   quality_floor=0.9)
     with pytest.raises(UnsupportedArchError, match="whisper-base"):
         eng.submit(arch="whisper-base", steps=STEPS, mode="clean")
     assert len(eng.queue) == 0          # nothing slipped into the queue
@@ -147,6 +157,12 @@ def test_ar_through_deadline_scheduler():
     assert len(res) == 1
     assert res[0].tokens is not None and len(res[0].tokens) == STEPS
     assert res[0].ar_detections > 0
+    # Frontier objectives on an AR request surface the servable's
+    # reasoned rejection through the scheduler too (no diffusion
+    # frontier is ever consulted for token decoding).
+    with pytest.raises(ValueError, match="frontier"):
+        sched.submit(arch=AR_ARCH, steps=STEPS, mode="stat_abft",
+                     quality_floor=0.9)
 
 
 @needs_mesh
