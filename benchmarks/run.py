@@ -26,6 +26,7 @@ MODULES = [
     "serving_telemetry",
     "ar_serving",
     "offload_overlap",
+    "trace_forensics",
 ]
 
 

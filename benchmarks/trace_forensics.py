@@ -1,0 +1,184 @@
+"""Flight-recorder forensics benchmark: span coverage, heatmap mass,
+recorder overhead.
+
+Drives one streamed + offloaded diffusion stream and one statistical-ABFT
+autoregressive stream through the serving engine with the flight recorder
+on, and emits ``BENCH_trace.json``:
+
+* **span coverage** -- every jitted streaming window, every offload
+  commit, and (AR) every rollback replay must appear as a span in the
+  recorder, counted against the expected numbers derived from the run
+  shape (windows = ceil(steps / stream) per batch, commits from the
+  offload store's own counters, replays from the served results). A
+  forensics trace with holes is worse than none;
+* **heatmap mass** -- the per-request resilience heatmap
+  (``RequestResult.detect_heatmap``, the live analogue of DRIFT
+  Figs 5-6) split into protected vs unprotected timestep mass: the
+  engine protects the first ``nominal_steps`` denoising steps at
+  nominal voltage, so detection mass should concentrate in the
+  *unprotected* tail -- the paper's Fig 5 structure, checked live;
+* **recorder overhead** -- host microseconds per ``record()`` call on a
+  full ring buffer, measured over ``OVERHEAD_RECORDS`` timed records and
+  asserted under ``OVERHEAD_BOUND_US``. The recorder sits on the batch
+  boundary of every serve, so its cost budget is part of the contract
+  (zero-perturbation covers *what* is computed; this bounds *how long*
+  the bookkeeping takes).
+
+Run from the repo root:
+
+    PYTHONPATH=src python -m benchmarks.trace_forensics
+
+Also registered in ``benchmarks.run``. Output lands in ./BENCH_trace.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.serving import DriftServeEngine, OffloadConfig
+from repro.serving.scheduler import DeadlineScheduler
+from repro.serving.trace import FlightRecorder, N_STEP_BINS
+
+DIFF_ARCH, DIFF_STEPS, STREAM, BUCKET, N_REQ = "dit-xl-512", 8, 2, 2, 4
+AR_ARCH, AR_STEPS = "olmo-1b", 8
+OVERHEAD_RECORDS = 10_000
+OVERHEAD_BOUND_US = 200.0        # per record(), lock + deque append
+
+
+def _span_counts(tracer):
+    counts = {}
+    for s in tracer.spans():
+        counts[s.kind] = counts.get(s.kind, 0) + 1
+    return counts
+
+
+def _diffusion_leg():
+    engine = DriftServeEngine(arch=DIFF_ARCH, smoke=True, bucket=BUCKET,
+                              offload=OffloadConfig())
+    sched = DeadlineScheduler(engine)
+    for i in range(N_REQ):
+        sched.submit(steps=DIFF_STEPS, mode="drift", op="undervolt",
+                     seed=i)
+    from repro.serving import PreviewEvent
+    results = [r for r in engine.run_stream(preview_interval=STREAM)
+               if not isinstance(r, PreviewEvent)]
+    counts = _span_counts(engine.tracer)
+    batches = engine.stats.batches
+    # offload windows the refresh interval; the engine streams with
+    # window = stream, so each batch runs ceil(steps / stream) windows
+    windows_expected = batches * -(-DIFF_STEPS // STREAM)
+    commits_expected = engine.offload_store.stats.commits
+    heat = next((r.detect_heatmap for r in results
+                 if r.detect_heatmap is not None), None)
+    blocks = next((r.detect_heatmap_blocks for r in results
+                   if r.detect_heatmap_blocks is not None), None)
+    leg = {
+        "requests": len(results),
+        "batches": batches,
+        "spans": counts,
+        "windows_expected": windows_expected,
+        "windows_recorded": counts.get("window", 0),
+        "commits_expected": commits_expected,
+        "commits_recorded": counts.get("offload_commit", 0),
+        "admissions_recorded": counts.get("admission", 0),
+        "detects_recorded": counts.get("detect", 0),
+        "coverage_ok": (counts.get("window", 0) == windows_expected
+                        and counts.get("offload_commit", 0)
+                        == commits_expected
+                        and counts.get("admission", 0) == N_REQ
+                        and counts.get("detect", 0) == batches),
+        "spans_dropped": engine.tracer.dropped,
+    }
+    return leg, heat, blocks, engine.nominal_steps
+
+
+def _ar_leg():
+    engine = DriftServeEngine(arch=AR_ARCH, smoke=True, bucket=BUCKET)
+    for i in range(N_REQ):
+        engine.submit(steps=AR_STEPS, mode="stat_abft", op="undervolt",
+                      seed=i)
+    results = engine.run()
+    counts = _span_counts(engine.tracer)
+    rollbacks = sum(r.ar_rollbacks for r in results) // BUCKET
+    return {
+        "requests": len(results),
+        "batches": engine.stats.batches,
+        "spans": counts,
+        "replays_expected": rollbacks,   # per batch: rollbacks are
+        "replays_recorded": counts.get("replay", 0),   # batch-level
+        "detections": sum(r.ar_detections for r in results),
+        "coverage_ok": counts.get("replay", 0) == rollbacks,
+        "spans_dropped": engine.tracer.dropped,
+    }
+
+
+def _heatmap_mass(heat, blocks, nominal_steps):
+    if heat is None:
+        return {"available": False}
+    # bin b of N covers steps [b*steps/N, (b+1)*steps/N); the engine
+    # pins the first nominal_steps to nominal voltage, so bins fully
+    # inside that prefix are the "protected" mass
+    per_bin = [sum(row[b] for row in heat) for b in range(len(heat[0]))]
+    steps_per_bin = DIFF_STEPS / len(per_bin)
+    protected = sum(m for b, m in enumerate(per_bin)
+                    if (b + 1) * steps_per_bin <= nominal_steps + 1e-9)
+    total = sum(per_bin)
+    return {
+        "available": True,
+        "site_labels": list(blocks),
+        "binned": [list(row) for row in heat],
+        "step_bins": len(per_bin),
+        "nominal_steps_protected": nominal_steps,
+        "protected_mass": protected,
+        "unprotected_mass": total - protected,
+        "total_mass": total,
+        "protected_fraction": protected / total if total else 0.0,
+    }
+
+
+def _recorder_overhead():
+    rec = FlightRecorder(capacity=4096)
+    # pre-fill so every timed record also pays the ring-buffer eviction
+    for i in range(4096):
+        rec.record("warm", "window", request_ids=(i,), batch_index=0)
+    t0 = time.perf_counter()
+    for i in range(OVERHEAD_RECORDS):
+        rec.record("bench", "window", request_ids=(i,), batch_index=1,
+                   from_step=i, done_steps=i + 1)
+    us = (time.perf_counter() - t0) * 1e6 / OVERHEAD_RECORDS
+    return {
+        "records_timed": OVERHEAD_RECORDS,
+        "us_per_record": us,
+        "bound_us": OVERHEAD_BOUND_US,
+        "under_bound": us < OVERHEAD_BOUND_US,
+    }
+
+
+def main() -> None:
+    diffusion, heat, blocks, nominal_steps = _diffusion_leg()
+    ar = _ar_leg()
+    heatmap = _heatmap_mass(heat, blocks, nominal_steps)
+    overhead = _recorder_overhead()
+
+    bench = {
+        "diffusion": diffusion,
+        "autoregressive": ar,
+        "heatmap": heatmap,
+        "recorder_overhead": overhead,
+        "step_bins_default": N_STEP_BINS,
+    }
+    with open("BENCH_trace.json", "w", encoding="utf-8") as fh:
+        json.dump(bench, fh, indent=2, sort_keys=True)
+    print(json.dumps(bench, indent=2, sort_keys=True))
+
+    assert diffusion["coverage_ok"], \
+        f"diffusion span coverage has holes: {diffusion}"
+    assert ar["coverage_ok"], f"AR span coverage has holes: {ar}"
+    assert overhead["under_bound"], \
+        (f"recorder overhead {overhead['us_per_record']:.1f}us/record "
+         f"over the {OVERHEAD_BOUND_US}us bound")
+    print("wrote BENCH_trace.json")
+
+
+if __name__ == "__main__":
+    main()

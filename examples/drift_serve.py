@@ -137,6 +137,10 @@ def build_parser():
                     help="disable metrics + learned latency estimates + "
                          "the adaptive BER guardband (explicit-op serving "
                          "is bit-identical; auto loses the floor)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write the flight recorder as Chrome/Perfetto "
+                         "trace JSON to DIR/flight.json after the run "
+                         "(docs/tracing.md)")
     return ap
 
 
@@ -296,6 +300,14 @@ def _drive(args, engine, server, ops, priorities, deadlines):
         print(f"offload: {ost.commits} commits, "
               f"{ost.bytes_offloaded / 1e6:.2f} MB offloaded, "
               f"{ost.restores} restores")
+    if args.trace_dir is not None:
+        import os
+
+        from repro.serving.trace import write_chrome_trace
+        os.makedirs(args.trace_dir, exist_ok=True)
+        path = os.path.join(args.trace_dir, "flight.json")
+        write_chrome_trace(path, engine.tracer.spans())
+        print(f"trace: {len(engine.tracer)} spans -> {path}")
 
 
 if __name__ == "__main__":

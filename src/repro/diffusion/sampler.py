@@ -75,6 +75,22 @@ class SampleOutput(NamedTuple):
     monitor: dvfs_lib.BerMonitorState
     total_corrected: jax.Array
     n_model_evals: jax.Array
+    # Resilience heatmap: detected row errors per (denoising step, site),
+    # shape (num_sample_steps, detection_rows(model_cfg)) int32 -- row 0 is
+    # the embedding/conditioning GEMMs for DiT-family models, rows 1..L the
+    # blocks; the UNet accumulates a single row. Batch-reduced (psum under
+    # the sharded engine), and always computed in-trace, so recording it
+    # never perturbs the latents. None for stub samplers that predate it.
+    heatmap: Optional[jax.Array] = None
+
+
+def detection_rows(model_cfg: ModelConfig) -> int:
+    """Rows in the per-step detection heatmap: one per block plus one for
+    the embedding/conditioning GEMMs (DiT family); the UNet's ExecContext
+    accumulates a single scalar, so it gets one row."""
+    if model_cfg.family == "unet":
+        return 1
+    return model_cfg.n_layers + 1
 
 
 class StreamEvent(NamedTuple):
@@ -95,13 +111,14 @@ def _model_eval(model_cfg: ModelConfig, params, latents, t, cond, text,
         # detections provably empty); reuse the store plumbing.
         scfg = dataclasses.replace(scfg, mode="drift")
         ber_by_class = jnp.zeros_like(ber_by_class)
+    zero_rows = jnp.zeros((detection_rows(model_cfg),), jnp.int32)
     if scfg.mode == "float_clean":
         if model_cfg.family == "unet":
             return unet_lib.forward(model_cfg, params, latents, t, text), \
-                stores, jnp.int32(0), jnp.int32(0)
+                stores, jnp.int32(0), jnp.int32(0), zero_rows
         eps, _, _ = dit_lib.forward(model_cfg, params, latents, t, cond,
                                     text=text)
-        return eps, stores, jnp.int32(0), jnp.int32(0)
+        return eps, stores, jnp.int32(0), jnp.int32(0), zero_rows
 
     if model_cfg.family == "unet":
         ctx = ExecContext(scfg, key=key, step=step_idx,
@@ -109,8 +126,9 @@ def _model_eval(model_cfg: ModelConfig, params, latents, t, cond, text,
                           have_ckpt=have_ckpt)
         eps = unet_lib.forward(model_cfg, params, latents, t, text, ctx=ctx)
         new_stores = ctx.state_out if ctx.state_out else stores
-        return eps, new_stores, ctx.stats["corrected_elems"], \
-            ctx.stats["detected_row_errors"]
+        detected = ctx.stats["detected_row_errors"]
+        return eps, new_stores, ctx.stats["corrected_elems"], detected, \
+            jnp.asarray(detected, jnp.int32)[None]
 
     embed_store, block_store = stores
     ds = dit_lib.DriftState(cfg=scfg, key=key, step=step_idx,
@@ -122,13 +140,14 @@ def _model_eval(model_cfg: ModelConfig, params, latents, t, cond, text,
                                          text=text, drift=ds)
     corrected = stats.get("corrected_elems", jnp.int32(0))
     detected = stats.get("detected_row_errors", jnp.int32(0))
+    det_blocks = stats.get("detected_per_block", zero_rows)
     # Modes that never write checkpoints (faulty / zeroing / recompute
     # baselines) return empty stores; keep the carry structure stable.
     new_embed = new_ds.embed_store if new_ds.embed_store else embed_store
     new_block = (new_ds.block_store
                  if jax.tree_util.tree_leaves(new_ds.block_store)
                  else block_store)
-    return eps, (new_embed, new_block), corrected, detected
+    return eps, (new_embed, new_block), corrected, detected, det_blocks
 
 
 def init_stores(model_cfg: ModelConfig, params, latents, t, cond, text,
@@ -190,25 +209,28 @@ def _make_step_fn(model_cfg: ModelConfig, cfg: SamplerConfig, sched,
                         ber_by_class, stores, i > 0)
 
         def do_compute(_):
-            eps, new_stores, corr, detected = _model_eval(
+            eps, new_stores, corr, detected, det_blocks = _model_eval(
                 model_cfg, params, latents, tvec, cond, text, drift_inputs,
                 gates=(cfg.layer_gate, cfg.embed_gate))
             new_taylor = ts_lib.update_on_compute(taylor, eps)
-            return eps, new_stores, new_taylor, corr, detected, jnp.int32(1)
+            return (eps, new_stores, new_taylor, corr, detected, det_blocks,
+                    jnp.int32(1))
 
         def do_forecast(_):
             k = i % cfg.taylorseer.interval
             eps = ts_lib.forecast(taylor, k, cfg.taylorseer.interval,
                                   cfg.taylorseer.order)
             return (eps, stores, taylor, jnp.int32(0), jnp.int32(0),
+                    jnp.zeros((detection_rows(model_cfg),), jnp.int32),
                     jnp.int32(0))
 
         if cfg.taylorseer.enabled:
-            eps, stores2, taylor2, corr, detected, ran = jax.lax.cond(
-                ts_lib.should_compute(i, cfg.taylorseer),
-                do_compute, do_forecast, operand=None)
+            eps, stores2, taylor2, corr, detected, det_blocks, ran = \
+                jax.lax.cond(ts_lib.should_compute(i, cfg.taylorseer),
+                             do_compute, do_forecast, operand=None)
         else:
-            eps, stores2, taylor2, corr, detected, ran = do_compute(None)
+            eps, stores2, taylor2, corr, detected, det_blocks, ran = \
+                do_compute(None)
 
         if cfg.precision.narrowed:
             # Narrowed precision plan: fake-quantize the denoiser output on
@@ -224,8 +246,10 @@ def _make_step_fn(model_cfg: ModelConfig, cfg: SamplerConfig, sched,
             mon, detected, n_words, cfg.drift.abft.threshold_bit,
             cfg.monitor_target_ber)
         new_latents = sched.ddim_step(latents, eps, t_now, t_nxt)
+        # The per-site detection vector rides the scan's ys slot: stacked
+        # over steps it becomes the (steps, rows) resilience heatmap.
         return (new_latents, stores2, taylor2, mon2,
-                corrected + corr, nevals + ran), None
+                corrected + corr, nevals + ran), det_blocks
 
     return step_fn
 
@@ -251,9 +275,9 @@ def sample(model_cfg: ModelConfig, params, key: jax.Array,
                          monitor0, ts)
     step_fn = _make_step_fn(model_cfg, cfg, sched, ber_table, params, key,
                             cond, text)
-    (latents, _, _, mon, corrected, nevals), _ = jax.lax.scan(
+    (latents, _, _, mon, corrected, nevals), heatmap = jax.lax.scan(
         step_fn, carry0, _scan_xs(ts, t_prev))
-    return SampleOutput(latents, mon, corrected, nevals)
+    return SampleOutput(latents, mon, corrected, nevals, heatmap)
 
 
 def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
@@ -295,11 +319,13 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
         def _window_runner(params, key, cond, text, carry, xs_slice):
             step_fn = _make_step_fn(model_cfg, cfg, sched, ber_table,
                                     params, key, cond, text)
-            return jax.lax.scan(step_fn, carry, xs_slice)[0]
+            return jax.lax.scan(step_fn, carry, xs_slice)
 
+    heat_chunks = []
     for start in range(0, n, window):
         xs_slice = tuple(x[start:start + window] for x in xs)
-        carry = _window_runner(params, key, cond, text, carry, xs_slice)
+        carry, heat = _window_runner(params, key, cond, text, carry, xs_slice)
+        heat_chunks.append(heat)
         done = min(start + window, n)
         if on_carry is not None:
             on_carry(done, carry)
@@ -308,7 +334,11 @@ def sample_stream(model_cfg: ModelConfig, params, key: jax.Array,
         if done < n:
             yield StreamEvent(step=done, latents=carry[0])
     latents, _, _, mon, corrected, nevals = carry
-    yield SampleOutput(latents, mon, corrected, nevals)
+    # Concatenating the windows' stacked ys reproduces the one-shot scan's
+    # (steps, rows) heatmap exactly -- integer counts, no accumulation
+    # order to differ on.
+    heatmap = jnp.concatenate(heat_chunks, axis=0)
+    yield SampleOutput(latents, mon, corrected, nevals, heatmap)
 
 
 def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
@@ -387,8 +417,14 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
                 carry = _pin_carry(carry)
             step_fn = _make_step_fn(model_cfg, cfg, sched, ber_table,
                                     params, key, cond, text)
-            carry, _ = jax.lax.scan(step_fn, carry, xs_slice)
-            return _pin_carry(carry) if mesh is not None else carry
+            carry, heat = jax.lax.scan(step_fn, carry, xs_slice)
+            if mesh is not None:
+                # Per-step detection rows are already batch-reduced sums,
+                # so replicating them lowers to the same psum the monitor
+                # state uses.
+                carry = _pin_carry(carry)
+                heat = jax.lax.with_sharding_constraint(heat, replicated)
+            return carry, heat
 
         window_jit = jax.jit(_window)
 
@@ -413,5 +449,6 @@ def make_sampler(model_cfg: ModelConfig, cfg: SamplerConfig,
             latents=_pin_batch(out.latents),
             monitor=jax.tree.map(pin_rep, out.monitor),
             total_corrected=pin_rep(out.total_corrected),
-            n_model_evals=pin_rep(out.n_model_evals))
+            n_model_evals=pin_rep(out.n_model_evals),
+            heatmap=pin_rep(out.heatmap))
     return jax.jit(_run)

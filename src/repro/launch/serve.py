@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import time
 from typing import Optional, Sequence
 
@@ -204,6 +205,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "Prometheus text, /healthz, SSE /events) on this "
                          "port for the duration of the run (0 = ephemeral, "
                          "printed at startup; omit = no server)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write the engine's flight-recorder ring buffer "
+                         "as Chrome/Perfetto trace-event JSON to "
+                         "DIR/flight.json after the drain (load it at "
+                         "ui.perfetto.dev; see docs/tracing.md)")
     ap.add_argument("--no-telemetry", action="store_true",
                     help="disable the telemetry subsystem (metrics, learned "
                          "latency estimates, adaptive BER guardband); "
@@ -354,6 +360,13 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
               f"observations over {len(tele.estimator)} configs; guardband "
               f"floor {ctrl.guard_index if ctrl else 0} "
               f"({ctrl.guard_op_name() if ctrl else 'n/a'})")
+    if args.trace_dir is not None:
+        from repro.serving.trace import write_chrome_trace
+        os.makedirs(args.trace_dir, exist_ok=True)
+        path = os.path.join(args.trace_dir, "flight.json")
+        write_chrome_trace(path, eng.tracer.spans())
+        print(f"  trace: {len(eng.tracer)} spans -> {path} "
+              f"(ui.perfetto.dev)")
     return results
 
 

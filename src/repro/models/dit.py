@@ -261,6 +261,13 @@ def forward(cfg: ModelConfig, params: Params, latents: jax.Array,
                                     + ectx.stats["corrected_elems"])
         stats["detected_row_errors"] = (jnp.sum(detected)
                                         + ectx.stats["detected_row_errors"])
+        # Per-site detection vector for the resilience heatmap (paper
+        # Figs 5-6): row 0 = embedding/conditioning GEMMs, rows 1..L =
+        # transformer blocks. Integer counts, so the scalar above stays
+        # exactly sum(detected_per_block).
+        stats["detected_per_block"] = jnp.concatenate(
+            [ectx.stats["detected_row_errors"][None],
+             jnp.asarray(detected, jnp.int32)])
         new_drift = dataclasses.replace(
             drift, embed_store=ectx.state_out, block_store=new_block_store)
     return eps, new_drift, stats

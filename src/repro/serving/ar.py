@@ -154,6 +154,10 @@ class DecodeOut(NamedTuple):
     rollbacks: int               # windows reverted + replayed
     n_model_evals: int           # prefill + decode steps incl. replays
     n_words: float               # GEMM words checked (0 for clean/ssm)
+    # Per-decode-step detection counts, shape (steps, 1) -- the AR twin of
+    # SampleOutput.heatmap (one "all" site; decode has no per-block split
+    # on the host loop). None for stub decoders that predate it.
+    heatmap: Optional[jax.Array] = None
 
 
 def make_decoder(cfg: ModelConfig, dcfg: DecodeConfig, *,
@@ -218,9 +222,18 @@ def make_decoder(cfg: ModelConfig, dcfg: DecodeConfig, *,
 
 def decode_batch(fns: DecoderFns, params, tokens: jax.Array,
                  monitor0: dvfs.BerMonitorState,
-                 run_key: jax.Array) -> DecodeOut:
+                 run_key: jax.Array,
+                 on_window: Optional[Callable[[int], None]] = None,
+                 on_replay: Optional[Callable[[int, int], None]] = None
+                 ) -> DecodeOut:
     """Host decode loop: prefill, then windows of decode steps with
-    snapshot / detect / rollback-replay. See module docstring."""
+    snapshot / detect / rollback-replay. See module docstring.
+
+    ``on_window(done_steps)`` / ``on_replay(window_start, window_len)``
+    are host-side flight-recorder taps fired after each decoded window /
+    each rollback replay; like the diffusion sampler's ``on_window`` they
+    run strictly between compiled calls and cannot perturb the tokens.
+    """
     dcfg = fns.dcfg
     assert tokens.shape[1] == PROMPT_LEN, tokens.shape
     last_tok, cache = fns.prefill(params, tokens)
@@ -231,6 +244,7 @@ def decode_batch(fns: DecoderFns, params, tokens: jax.Array,
     rollbacks = 0
     n_model_evals = 1                    # the prefill pass
     window = max(dcfg.window, 1)
+    det_steps = [0.0]                    # prefill runs clean: no detections
 
     i = 1
     while i < dcfg.steps:
@@ -244,6 +258,7 @@ def decode_batch(fns: DecoderFns, params, tokens: jax.Array,
                 params, cache, last_tok, step, monitor, run_key,
                 jnp.float32(1.0))
             window_toks.append(last_tok)
+            det_steps.append(float(det))
             det_w += float(det)
             n_words += float(words)
         detections += det_w
@@ -263,10 +278,16 @@ def decode_batch(fns: DecoderFns, params, tokens: jax.Array,
                 window_toks.append(last_tok)
             rollbacks += 1
             n_model_evals += n
+            if on_replay is not None:
+                on_replay(i, n)
         generated.extend(window_toks)
         i += n
+        if on_window is not None:
+            on_window(i)
 
     toks = jnp.stack(generated, axis=1)             # (B, steps)
+    heatmap = jnp.asarray(det_steps, jnp.int32)[:, None]   # (steps, 1)
     return DecodeOut(tokens=toks, monitor=monitor,
                      detections=detections, rollbacks=rollbacks,
-                     n_model_evals=n_model_evals, n_words=n_words)
+                     n_model_evals=n_model_evals, n_words=n_words,
+                     heatmap=heatmap)

@@ -15,7 +15,8 @@ distinct window length.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+import time
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.rollback import DEFAULT_INTERVAL
 
@@ -63,6 +64,12 @@ class CompiledSamplerCache:
         self.compiles = 0   # cache misses (factory invocations)
         self.hits = 0       # cache hits (reused compiled fn)
         self.traces = 0     # actual JAX traces observed via on_trace
+        # Flight-recorder tap: fired on every cache miss with
+        # (key, wall seconds the factory took). The factory only *builds*
+        # the jitted fn (tracing may be deferred to first call), so this
+        # measures construction; trace-time compiles still show up through
+        # note_trace and the window spans around the first call.
+        self.on_compile: Optional[Callable[[SamplerKey, float], None]] = None
 
     def note_trace(self) -> None:
         self.traces += 1
@@ -73,9 +80,12 @@ class CompiledSamplerCache:
         if fn is not None:
             self.hits += 1
             return fn
+        t0 = time.perf_counter()
         fn = factory(key)
         self._fns[key] = fn
         self.compiles += 1
+        if self.on_compile is not None:
+            self.on_compile(key, time.perf_counter() - t0)
         return fn
 
     def __contains__(self, key: SamplerKey) -> bool:

@@ -99,6 +99,7 @@ from repro.serving.offload import OffloadConfig, OffloadPlanner, OffloadStore
 from repro.serving.request import (GenerationRequest, RequestQueue,
                                    RequestResult)
 from repro.serving.telemetry import EngineTelemetry
+from repro.serving.trace import FlightRecorder
 from repro.train import steps as steps_lib
 
 # Named operating points a request (or the auto ladder) can resolve to.
@@ -151,7 +152,8 @@ class DriftServeEngine:
                  sampler_factory: Optional[Callable] = None,
                  energy_model: Optional[energy.EnergyModel] = None,
                  telemetry: Optional[EngineTelemetry] = None,
-                 offload: Optional[OffloadConfig] = None):
+                 offload: Optional[OffloadConfig] = None,
+                 tracer: Optional[FlightRecorder] = None):
         self.default_arch = arch
         self.default_smoke = smoke
         self.nominal_steps = nominal_steps
@@ -169,6 +171,14 @@ class DriftServeEngine:
         # loses the guardband floor).
         self.telemetry = (telemetry if telemetry is not None
                           else EngineTelemetry()).bind(monitor_target_ber)
+        # Flight recorder (repro.serving.trace, docs/tracing.md): span
+        # ring buffer for per-request forensics. Default ON -- every tap
+        # is host-side between traced computations, so finals are
+        # bit-identical with it enabled, disabled, or replaced
+        # (tests/test_trace.py asserts it on both engines). Pass
+        # FlightRecorder(enabled=False) for a recorder-free engine.
+        self.tracer = tracer if tracer is not None else FlightRecorder()
+        self.cache.on_compile = self._on_compile
         self.monitor = dvfs_lib.ber_monitor_init()
         # Virtual clock in modeled-accelerator seconds: advanced by each
         # batch's perfmodel latency. Deadlines/aging are measured on it.
@@ -186,8 +196,7 @@ class DriftServeEngine:
             lambda key, model_cfg, scfg, on_trace:
             sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
                                      stream_window=key.stream,
-                                     on_window=self.telemetry
-                                     .on_stream_window,
+                                     on_window=self._on_stream_window,
                                      on_carry=self._offload_on_carry))
         self._energy_model = energy_model
         self._full_cfgs: Dict[str, object] = {}
@@ -201,6 +210,8 @@ class DriftServeEngine:
             else None
         self._offload_store = (OffloadStore(self.offload_cfg)
                                if self.offload_cfg is not None else None)
+        if self._offload_store is not None:
+            self._offload_store.on_event = self.tracer.on_offload
         self._active_offload: Optional[OffloadStore] = None
         self._planner: Optional[OffloadPlanner] = None
         self._interval_memo: Dict[Tuple, int] = {}
@@ -255,6 +266,12 @@ class DriftServeEngine:
         fields = self.servable_for(fields["arch"]).validate_request(fields)
         rid = self.queue.submit(**fields)
         self.telemetry.on_submit()
+        self.tracer.on_submit(rid, self.clock_s,
+                              arch=fields["arch"],
+                              mode=fields.get("mode", "drift"),
+                              op=fields.get("op", "undervolt"),
+                              steps=fields.get("steps", 10),
+                              priority=fields.get("priority", "standard"))
         return rid
 
     # ------------------------------------------------------------ serving
@@ -403,6 +420,20 @@ class DriftServeEngine:
             return None
         return self._offload_store
 
+    def _on_stream_window(self, done_steps: int) -> None:
+        """Combined window-boundary tap handed to ``make_sampler``: the
+        telemetry stream counter plus a flight-recorder window span. Both
+        are host-side Python between windows -- zero trace impact."""
+        self.telemetry.on_stream_window(done_steps)
+        self.tracer.on_window(done_steps)
+
+    def _on_compile(self, key: SamplerKey, elapsed_s: float) -> None:
+        """CompiledSamplerCache miss tap: a compile span with the factory's
+        wall cost and enough key fields to identify the configuration."""
+        self.tracer.on_compile(elapsed_s, arch=key.arch, mode=key.mode,
+                               op=key.op, steps=key.steps,
+                               stream=key.stream, bucket=key.bucket)
+
     def _offload_on_carry(self, done_steps: int, carry) -> None:
         """Sampler window-boundary tap (``make_sampler(on_carry=...)``):
         forwards the scan carry to the batch's bound offload store. A
@@ -457,6 +488,14 @@ class DriftServeEngine:
         inputs = self.servable_for(key.arch).batch_inputs(
             model_cfg, list(padded_seeds))
         run_key = jax.random.fold_in(self._base_key, batch_index)
+        # queue_wait spans per member + the batch_assembly span; window/
+        # offload/detect spans until the next batch attach to this context
+        self.tracer.begin_batch(batch_index,
+                                [r.request_id for r in mb.requests],
+                                self.clock_s, arch=key.arch, mode=key.mode,
+                                op=key.op, steps=key.steps,
+                                bucket=key.bucket, n_live=len(mb.requests),
+                                n_pad=mb.n_pad)
         return _BatchCtx(batch_index=batch_index, params=params,
                          padded_seeds=padded_seeds, inputs=inputs,
                          run_key=run_key)
@@ -556,6 +595,8 @@ class DriftServeEngine:
                     completed_at - req.submitted_at_s - batch_latency_s,
                     0.0),
                 deadline_missed=missed,
+                detect_heatmap=outcome.heatmap,
+                detect_heatmap_blocks=outcome.heatmap_blocks,
                 **outcome.per_slot[slot],
             ))
         # telemetry tap: metrics + latency history for the scheduler's
@@ -573,4 +614,20 @@ class DriftServeEngine:
             self.telemetry.on_offload(ctx.offload_delta,
                                       interval=key.rollback_interval,
                                       stall_s=stall_s)
+        # resilience-heatmap export (monitored batches with a real
+        # sampler): labeled counters for /metrics, and a detect span in
+        # the flight recorder summarizing where this batch's errors landed
+        detect_attrs = None
+        if outcome.heatmap is not None:
+            self.telemetry.on_heatmap(outcome.heatmap,
+                                      outcome.heatmap_blocks)
+            detect_attrs = dict(heatmap=outcome.heatmap,
+                                blocks=outcome.heatmap_blocks,
+                                corrected=corrected)
+        self.tracer.finish_batch(self.clock_s, detect_attrs=detect_attrs,
+                                 latency_s=batch_latency_s,
+                                 energy_j=cost["energy_j"],
+                                 stall_s=stall_s, mode=key.mode,
+                                 op=key.op or "nominal",
+                                 n_model_evals=nevals)
         return results

@@ -43,7 +43,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 from repro.core.rollback import DEFAULT_INTERVAL
 from repro.serving.offload import layout as layout_lib
@@ -117,6 +118,11 @@ class OffloadStore:
         self._prev_done = 0
         self._batch_index = -1
         self._batch_mark = self.stats.snapshot()
+        # Flight-recorder tap, fired as on_event(event, step,
+        # wall_elapsed_s, **attrs) after each commit swap (from the
+        # background thread -- the recorder is lock-protected) and each
+        # restore. None = no tracing.
+        self.on_event: Optional[Callable] = None
 
     # ------------------------------------------------------------ binding
     def begin_batch(self, interval: int, batch_index: int) -> None:
@@ -182,6 +188,7 @@ class OffloadStore:
             # offload were healthy: stash and re-raise from wait(), so
             # the next join point (begin/finish_batch, restore) surfaces
             # the broken recovery guarantee to the engine.
+            t0 = time.perf_counter()
             try:
                 packed = layout_lib.pack_store(stores, self.cfg.tile_m,
                                                self.cfg.tile_n,
@@ -195,6 +202,10 @@ class OffloadStore:
                 self._front_step = step
                 self.stats.commits += 1
                 self.stats.bytes_offloaded += nbytes
+            if self.on_event is not None:
+                self.on_event("commit", step,
+                              time.perf_counter() - t0, nbytes=nbytes,
+                              asynchronous=self.cfg.async_commit)
 
         if not self.cfg.async_commit:
             _do_commit()
@@ -244,8 +255,14 @@ class OffloadStore:
         self.wait()
         with self._lock:
             front = self._front
+            front_step = self._front_step
         if front is None:
             raise RuntimeError("restore() before any committed snapshot")
         with self._lock:
             self.stats.restores += 1
-        return layout_lib.unpack_store(front)
+        t0 = time.perf_counter()
+        out = layout_lib.unpack_store(front)
+        if self.on_event is not None:
+            self.on_event("restore", front_step,
+                          time.perf_counter() - t0)
+        return out

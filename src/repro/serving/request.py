@@ -202,6 +202,15 @@ class RequestResult:
     completed_at_s: float = 0.0            # engine clock after this batch
     queue_wait_s: float = 0.0              # completed_at - submitted - batch
     deadline_missed: bool = False
+    # --- resilience heatmap (batch-level, like batch_corrected_elems: the
+    # detection counts are batch-tensor sums and cannot be split per
+    # request). Nested tuple of ints, rows = detection sites (labeled by
+    # ``detect_heatmap_blocks``; row 0 is the embedding/conditioning GEMMs
+    # for DiT archs, AR decodes report one "all" row), cols = timestep
+    # bins (docs/tracing.md). None when the batch produced no heatmap
+    # (unmonitored modes, stub samplers in tests).
+    detect_heatmap: Optional[tuple] = None
+    detect_heatmap_blocks: Optional[tuple] = None
 
 
 class RequestQueue:

@@ -199,6 +199,10 @@ class DeadlineScheduler:
         # workloads never pay the calibration.
         self._frontier_builder: Optional[frontier_lib.FrontierBuilder] = \
             None
+        # Decision-audit scratch: _plan_frontier stashes the candidate
+        # set it considered here so submit() can attach it to the
+        # request's "admission" span (docs/tracing.md). Reset per plan().
+        self._frontier_audit: Optional[Dict[str, object]] = None
 
     # ------------------------------------------------------------- intake
     def submit(self, **fields) -> Admission:
@@ -214,11 +218,24 @@ class DeadlineScheduler:
         fields.setdefault("smoke", eng.default_smoke)
         fields.setdefault("submitted_at_s", eng.clock_s)
         # Probe request: normalizes defaults + runs field validation once.
-        probe = GenerationRequest(request_id=-1, **fields)
+        try:
+            probe = GenerationRequest(request_id=-1, **fields)
+        except (TypeError, ValueError) as exc:
+            eng.telemetry.on_rejection("validation")
+            eng.tracer.record("admission", "admission",
+                              t0_virtual_s=eng.clock_s, admitted=False,
+                              action="rejected",
+                              reason=f"validation: {exc}")
+            raise
         adm = self.plan(probe)
         eng.telemetry.on_admission(adm.action)
         if not adm.admitted:
             self.stats.rejected += 1
+            wants_frontier = (probe.energy_budget_j is not None
+                              or probe.quality_floor is not None)
+            eng.telemetry.on_rejection(
+                "budget-infeasible" if wants_frontier else "projected-miss")
+            self._record_decision(adm, request_id=-1)
             return adm
         self.stats.admitted += 1
         if adm.action == "escalated-op":
@@ -236,7 +253,41 @@ class DeadlineScheduler:
             rewrite["precision"] = adm.precision
             rewrite["taylorseer"] = adm.taylorseer
         rid = eng.submit(**rewrite)
-        return dataclasses.replace(adm, request_id=rid)
+        adm = dataclasses.replace(adm, request_id=rid)
+        self._record_decision(adm, request_id=rid)
+        return adm
+
+    def _record_decision(self, adm: Admission, request_id: int) -> None:
+        """Decision audit (docs/tracing.md): one ``admission`` span per
+        planned request in the engine's flight recorder, carrying the
+        full :class:`Admission` record -- and, when a frontier objective
+        was consulted, the candidate set ``_plan_frontier`` weighed --
+        so every ``action="frontier"`` rewrite (and every fallback) is
+        reconstructible from the trace alone."""
+        eng = self.engine
+        attrs: Dict[str, object] = dict(
+            admitted=adm.admitted, action=adm.action, op=adm.op,
+            steps=adm.steps, precision=adm.precision,
+            taylorseer=adm.taylorseer)
+        if adm.reason:
+            attrs["reason"] = adm.reason
+        if adm.projected_wait_s is not None:
+            attrs["projected_wait_s"] = adm.projected_wait_s
+            attrs["projected_total_s"] = adm.projected_total_s
+        if adm.projected_energy_j is not None:
+            attrs["projected_energy_j"] = adm.projected_energy_j
+            attrs["quality"] = adm.quality
+        if self._frontier_audit is not None:
+            if adm.action == "frontier":
+                attrs.update(self._frontier_audit)
+            else:
+                # unsatisfiable objective that fell back to the ladder
+                # (or to rejection): keep the evidence of what was
+                # considered next to the fallback decision
+                attrs["frontier_fallback"] = dict(self._frontier_audit)
+        ids = () if request_id < 0 else (request_id,)
+        eng.tracer.record("admission", "admission", request_ids=ids,
+                          t0_virtual_s=eng.clock_s, **attrs)
 
     # ------------------------------------------------------------- policy
     def plan(self, req: GenerationRequest) -> Admission:
@@ -255,6 +306,7 @@ class DeadlineScheduler:
         """
         cap = req.steps if req.step_budget is None \
             else min(req.steps, req.step_budget)
+        self._frontier_audit = None
         wants_frontier = (req.energy_budget_j is not None
                           or req.quality_floor is not None)
         if req.deadline_s is None:
@@ -361,6 +413,17 @@ class DeadlineScheduler:
               and (req.energy_budget_j is None
                    or p.energy_j <= req.energy_budget_j + 1e-12)
               and (budget is None or lat[p] <= budget)]
+        # Audit record for the admission span: every Pareto point that
+        # was on the table, rendered compactly (the frontier is the
+        # pruned set, typically a handful of points).
+        self._frontier_audit = dict(
+            frontier_points=len(points), frontier_ok=len(ok),
+            frontier_considered=tuple(
+                f"{p.op}/{p.steps}st/{p.precision}"
+                + ("/ts" if p.taylorseer else "")
+                + f" q={p.quality:.4f} e={p.energy_j:.4g}J"
+                  f" l={lat[p]:.4g}s"
+                for p in points))
         if not ok:
             return None
         if budget is not None:
@@ -379,6 +442,10 @@ class DeadlineScheduler:
             pick = min(ok, key=lambda p: (-p.quality, p.energy_j, lat[p],
                                           frontier_lib.sort_key(p)))
         eng.telemetry.on_frontier_choice(objective, len(points))
+        self._frontier_audit.update(
+            objective=objective,
+            chosen=(f"{pick.op}/{pick.steps}st/{pick.precision}"
+                    + ("/ts" if pick.taylorseer else "")))
         return Admission(
             admitted=True, op=pick.op, steps=pick.steps, action="frontier",
             projected_wait_s=wait,

@@ -107,6 +107,11 @@ class BatchOutcome:
     rc: energy.RunConfig           # perfmodel run shape for this batch
     n_words: int                   # telemetry BER denominator (GEMM words)
     per_slot: List[dict]           # extra RequestResult fields per live slot
+    # Resilience heatmap summary (serving/trace/heatmap.py): nested tuple
+    # (sites, timestep bins) of detection counts plus its row labels; None
+    # when the batch produced none (stub samplers, unmonitored paths).
+    heatmap: Optional[tuple] = None
+    heatmap_blocks: Optional[tuple] = None
 
 
 class ServableModel:
@@ -342,10 +347,12 @@ class DiffusionServable(ServableModel):
                 lpips_vs_clean=float(metrics.lpips_proxy(a, b)),
                 psnr_vs_clean_db=float(metrics.psnr(a, b)),
                 latents=a[0]))
+        from repro.serving.trace import heatmap as heatmap_lib
+        heat, blocks = heatmap_lib.summarize(getattr(out, "heatmap", None))
         return BatchOutcome(
             corrected=corrected, n_model_evals=nevals, rc=rc,
             n_words=int(latents.size) * max(key.steps, 1),
-            per_slot=per_slot)
+            per_slot=per_slot, heatmap=heat, heatmap_blocks=blocks)
 
 
 # ----------------------------------------------------- autoregressive path
@@ -436,8 +443,11 @@ class AutoregressiveServable(ServableModel):
         eng = self.eng
         fns = eng.cache.get(mb.key, self.build_fn)
         (tokens,) = ctx.inputs
-        return ar.decode_batch(fns, ctx.params, tokens, eng.monitor,
-                               ctx.run_key)
+        tracer = getattr(eng, "tracer", None)
+        return ar.decode_batch(
+            fns, ctx.params, tokens, eng.monitor, ctx.run_key,
+            on_window=None if tracer is None else tracer.on_window,
+            on_replay=None if tracer is None else tracer.on_replay)
 
     def execute_stream(self, mb, ctx, preview_interval: int) -> Iterator:
         raise ValueError(
@@ -508,12 +518,14 @@ class AutoregressiveServable(ServableModel):
                 token_match_vs_clean=1.0 - mismatch,
                 ar_detections=int(out.detections),
                 ar_rollbacks=int(out.rollbacks)))
+        from repro.serving.trace import heatmap as heatmap_lib
+        heat, blocks = heatmap_lib.summarize(getattr(out, "heatmap", None))
         return BatchOutcome(
             corrected=int(out.rollbacks),
             n_model_evals=int(out.n_model_evals),
             rc=rc,
             n_words=max(int(out.n_words), 1),
-            per_slot=per_slot)
+            per_slot=per_slot, heatmap=heat, heatmap_blocks=blocks)
 
 
 _SERVABLE_CLASSES = {

@@ -106,8 +106,7 @@ class ShardedDriftServeEngine(DriftServeEngine):
         return sampler_lib.make_sampler(model_cfg, scfg, on_trace=on_trace,
                                         mesh=self.mesh,
                                         stream_window=key.stream,
-                                        on_window=self.telemetry
-                                        .on_stream_window,
+                                        on_window=self._on_stream_window,
                                         on_carry=self._offload_on_carry)
 
     def _params_for(self, arch: str, smoke: bool):

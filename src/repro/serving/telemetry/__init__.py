@@ -38,6 +38,7 @@ docs/telemetry.md.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 from repro.serving.telemetry.controller import (GuardbandConfig,
@@ -48,6 +49,7 @@ from repro.serving.telemetry.history import (BatchObservation,
 from repro.serving.telemetry.metrics import (Counter, Gauge, Histogram,
                                              MetricsRegistry,
                                              merge_labeled_expositions)
+from repro.version import __version__ as _build_version
 
 __all__ = [
     "EngineTelemetry",
@@ -191,6 +193,27 @@ class EngineTelemetry:
         self._m_off_interval = r.gauge(
             "drift_offload_interval",
             "Rollback refresh interval of the last offloaded batch")
+        # flight-recorder / forensics surfaces (repro.serving.trace)
+        self._m_heatmap = r.counter(
+            "drift_detect_heatmap_total",
+            "ABFT detections bucketed by model site and timestep bin "
+            "(the live analogue of DRIFT Figs 5-6)",
+            label_names=("block", "step_bin"))
+        self._m_rejections = r.counter(
+            "drift_scheduler_rejections_total",
+            "Requests the scheduler refused to enqueue",
+            label_names=("reason",))
+        self._m_build = r.gauge(
+            "drift_build_info",
+            "Constant 1; build metadata rides in the labels",
+            label_names=("version", "paradigms"))
+        self._m_build.labels(version=_build_version,
+                             paradigms="diffusion,autoregressive").set(1.0)
+        self._m_uptime = r.gauge(
+            "drift_engine_uptime_seconds",
+            "Wall seconds since this engine's telemetry was bound")
+        self._t0_wall = time.monotonic()
+        self._m_uptime.set(0.0)
         return self
 
     # -------------------------------------------------------------- hooks
@@ -218,6 +241,7 @@ class EngineTelemetry:
         self._m_ema.set(ema_ber)
         self._m_ladder.set(op_index)
         self._m_corrected.inc(corrected)
+        self._m_uptime.set(time.monotonic() - self._t0_wall)
         for res in results:
             self._m_queue_wait.observe(res.queue_wait_s)
             if res.deadline_missed:
@@ -274,6 +298,28 @@ class EngineTelemetry:
     def on_admission(self, action: str) -> None:
         if self.enabled:
             self._m_admissions.labels(action=action).inc()
+
+    def on_rejection(self, reason: str) -> None:
+        """One scheduler refusal. ``reason``: "projected-miss" (deadline
+        unreachable on the ladder) | "budget-infeasible" (frontier
+        objective with no qualifying point) | "validation" (malformed
+        request fields)."""
+        if self.enabled:
+            self._m_rejections.labels(reason=reason).inc()
+
+    def on_heatmap(self, heatmap, blocks) -> None:
+        """One monitored batch's binned detection heatmap: ``heatmap`` is
+        the nested int tuple (sites, step_bins) from
+        ``trace.heatmap.summarize``, ``blocks`` the matching site labels.
+        Accumulated into ``drift_detect_heatmap_total{block, step_bin}``;
+        zero cells are skipped so the exposition stays sparse."""
+        if not self.enabled or heatmap is None:
+            return
+        for site, row in zip(blocks, heatmap):
+            for b, count in enumerate(row):
+                if count:
+                    self._m_heatmap.labels(
+                        block=site, step_bin=str(b)).inc(count)
 
     def on_projection(self, source: str) -> None:
         """source: "learned" | "perfmodel" -- which clock priced a

@@ -59,7 +59,20 @@ Endpoints:
     ``/events`` request 503 instead of corrupting the single-threaded
     engine.
 
-Wire-format details and the metric catalog: docs/telemetry.md.
+``GET /trace/<request_id>``
+    One request's span tree from the engine's flight recorder
+    (``serving/trace``), as JSON: spans oldest-first with both clocks,
+    plus the scheduler's decision record surfaced at the top level.
+    404 when the id is unknown, has been evicted from the bounded ring
+    buffer, or the recorder is disabled.
+
+``GET /flight``
+    The whole flight-recorder ring buffer as Chrome/Perfetto
+    trace-event JSON -- save it and load at ``ui.perfetto.dev``. Empty
+    ``traceEvents`` (plus metadata) when nothing is recorded.
+
+Wire-format details and the metric catalog: docs/telemetry.md; span
+taxonomy and recorder bounds: docs/tracing.md.
 """
 from __future__ import annotations
 
@@ -75,6 +88,7 @@ import numpy as np
 
 from repro.serving.request import PreviewEvent, RequestResult
 from repro.serving.telemetry.metrics import merge_labeled_expositions
+from repro.serving.trace import request_tree, to_chrome_trace
 
 
 def latents_sha256(latents) -> str:
@@ -208,6 +222,10 @@ class TelemetryHTTPServer:
             return self._metrics(h)
         if parsed.path == "/events":
             return self._events(h, parse_qs(parsed.query))
+        if parsed.path == "/flight":
+            return self._flight(h)
+        if parsed.path.startswith("/trace/"):
+            return self._trace(h, parsed.path[len("/trace/"):])
         self._respond(h, 404, "application/json",
                       json.dumps({"error": f"no route {parsed.path}"}))
 
@@ -257,6 +275,36 @@ class TelemetryHTTPServer:
             return
         self._respond(h, 200, tele.registry.CONTENT_TYPE,
                       tele.registry.expose())
+
+    def _flight(self, h) -> None:
+        """The whole ring buffer as Chrome trace JSON (lock-free read:
+        the recorder snapshots its deque under its own lock)."""
+        tracer = getattr(self.engine, "tracer", None)
+        spans = tracer.spans() if tracer is not None else []
+        self._respond(h, 200, "application/json",
+                      json.dumps(to_chrome_trace(spans)))
+
+    def _trace(self, h, tail: str) -> None:
+        """``GET /trace/<request_id>``: one request's span tree, or 404
+        for a non-integer id, an unknown/evicted request, or a disabled
+        (or absent) recorder -- an empty ring buffer can't distinguish
+        "never existed" from "evicted", so both are 404."""
+        try:
+            rid = int(tail)
+        except ValueError:
+            self._respond(h, 404, "application/json",
+                          json.dumps({"error": f"bad request id {tail!r}"}))
+            return
+        tracer = getattr(self.engine, "tracer", None)
+        spans = tracer.spans(request_id=rid) if tracer is not None else []
+        if not spans:
+            self._respond(h, 404, "application/json",
+                          json.dumps({"error": f"no trace for request "
+                                               f"{rid} (unknown, evicted, "
+                                               "or recorder disabled)"}))
+            return
+        self._respond(h, 200, "application/json",
+                      json.dumps(request_tree(spans, rid)))
 
     def _events(self, h, query) -> None:
         try:

@@ -37,8 +37,16 @@ DEFAULT_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
 def nearest_rank(sorted_data: Sequence[float], q: float) -> float:
     """Nearest-rank percentile (q in [0, 100]) over already-sorted data --
     the one shared definition for histogram reservoirs and the latency
-    estimator's observation windows."""
-    assert sorted_data, "percentile of empty data"
+    estimator's observation windows.
+
+    Raises ``ValueError`` on empty data or an out-of-range ``q`` (real
+    errors, not asserts: they must survive ``python -O``, and the empty
+    case is reachable from any caller that forgets the
+    ``percentile() -> None`` contract on a fresh reservoir)."""
+    if not sorted_data:
+        raise ValueError("percentile of empty data")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q!r} outside [0, 100]")
     rank = round(q / 100.0 * (len(sorted_data) - 1))
     return sorted_data[max(0, min(len(sorted_data) - 1, int(rank)))]
 

@@ -1,0 +1,14 @@
+"""Per-request tracing and fault forensics for the serving stack.
+
+See :mod:`repro.serving.trace.recorder` for the span taxonomy and the
+zero-perturbation contract, :mod:`repro.serving.trace.export` for the
+Chrome/Perfetto writer, and ``docs/tracing.md`` for the operator view.
+"""
+from .recorder import SPAN_KINDS, FlightRecorder, Span
+from .export import (request_tree, span_to_event, to_chrome_trace,
+                     write_chrome_trace)
+from .heatmap import N_STEP_BINS, bin_heatmap, site_labels, summarize
+
+__all__ = ["SPAN_KINDS", "FlightRecorder", "Span", "request_tree",
+           "span_to_event", "to_chrome_trace", "write_chrome_trace",
+           "N_STEP_BINS", "bin_heatmap", "site_labels", "summarize"]

@@ -1,0 +1,7 @@
+"""Single source of the reproduction's version string.
+
+``src/repro`` is a namespace package (no ``__init__.py``), so the usual
+``repro.__version__`` has nowhere to live; telemetry's ``drift_build_info``
+gauge and the trace exporters import it from here instead.
+"""
+__version__ = "0.9.0"

@@ -38,7 +38,7 @@ REQUIRED_FLAGS = ("--op", "--priority", "--deadline", "--step-budget",
                   "--stream", "--batch", "--steps", "--arch",
                   "--metrics-port", "--no-telemetry",
                   "--rollback-interval", "--offload",
-                  "--energy-budget", "--quality-floor")
+                  "--energy-budget", "--quality-floor", "--trace-dir")
 # --arch help must be registry-derived: every registered config by name,
 # plus the paradigm labels the registry groups them under.
 PARADIGM_WORDS = ("diffusion", "autoregressive", "unsupported")

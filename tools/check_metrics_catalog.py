@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Assert docs/telemetry.md's metric catalog covers every registered metric.
+
+Binds a real ``EngineTelemetry`` (plus the serving-layer hooks that
+register lazily through ``registry.counter(...)`` idempotence: a bound
+engine registers everything in one place, ``EngineTelemetry.bind``),
+walks the registry, and fails if any metric family name is missing a
+``| `name` |`` row in the catalog table — the docs drift this script
+exists to catch. The same assertion runs as a tier-1 test
+(tests/test_trace.py::test_metrics_catalog_covers_registry), so a PR
+cannot pass tests locally and still break the docs job.
+
+Run from the repo root (CI does: the docs job in
+.github/workflows/ci.yml):
+
+    PYTHONPATH=src python tools/check_metrics_catalog.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+from repro.serving.telemetry import EngineTelemetry  # noqa: E402
+
+DOC = "docs/telemetry.md"
+
+
+def registered_metric_names():
+    """Every metric family a bound engine telemetry registers."""
+    tele = EngineTelemetry().bind(target_ber=3e-3)
+    return sorted(tele.registry._metrics)
+
+
+def missing_from_catalog(doc_text, names):
+    return [n for n in names if f"`{n}`" not in doc_text]
+
+
+def main() -> int:
+    with open(DOC, encoding="utf-8") as fh:
+        doc = fh.read()
+    names = registered_metric_names()
+    missing = missing_from_catalog(doc, names)
+    if missing:
+        print(f"FAIL: {DOC} catalog is missing {len(missing)} registered "
+              f"metric(s): {missing}", file=sys.stderr)
+        return 1
+    print(f"ok: all {len(names)} registered metric families have a "
+          f"catalog row in {DOC}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
