@@ -1,0 +1,91 @@
+"""Energy-ledger + SLO benchmark: where the joules go, per DVFS point.
+
+Drives a mixed-operating-point request stream through a telemetry-enabled
+engine and emits ``BENCH_energy.json``:
+
+* **breakdown shares per op** -- each ledger component's fraction of the
+  billed joules, per operating point that served batches (the live
+  analogue of the paper's Fig 11 energy decomposition: compute at the
+  aggressive (V, f), checkpoint-refresh DRAM, recovery traffic, static);
+* **ledger residual** -- ``max |sum(components) - energy_j|`` over every
+  result AND every batch, asserted to be exactly 0.0: the billing
+  invariant (serving.telemetry.energy.verify_cost) is re-proved on every
+  benchmark run and gated at zero tolerance by tools/bench_history.py;
+* **SLO burn-rate trace** -- per drained phase, every objective's
+  fast/slow burn rates and breach state on the deterministic virtual
+  clock (so two runs of this benchmark emit byte-identical SLO traces).
+
+Run from the repo root:
+
+    PYTHONPATH=src python -m benchmarks.energy_slo
+
+Also registered in ``benchmarks.run``. Output: ./BENCH_energy.json.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.serving import DriftServeEngine
+from repro.serving.telemetry.energy import ledger_total
+
+ARCH, STEPS, BUCKET = "dit-xl-512", 4, 2
+# Three drain phases, each a different op mix: the SLO windows see the
+# energy-per-request objective move as the mix shifts toward nominal.
+PHASES = [
+    ["undervolt", "undervolt", "uv-mild", "uv-mild"],
+    ["overclock", "overclock", "auto", "auto"],
+    ["nominal", "nominal", "near-nominal", "near-nominal"],
+]
+
+
+def main() -> None:
+    engine = DriftServeEngine(arch=ARCH, smoke=True, bucket=BUCKET)
+    tele = engine.telemetry
+    residual = 0.0
+    slo_trace = []
+    served = 0
+    for phase, ops in enumerate(PHASES):
+        for i, op in enumerate(ops):
+            engine.submit(steps=STEPS, mode="drift", op=op,
+                          seed=phase * len(ops) + i)
+        for res in engine.run():
+            served += 1
+            residual = max(residual,
+                           abs(ledger_total(res.energy_breakdown)
+                               - res.energy_j))
+        snap = tele.slo_snapshot()
+        slo_trace.append({
+            "phase": phase, "ops": ops, "clock_s": snap["clock_s"],
+            "objectives": {
+                obj: {k: o[k] for k in ("burn_fast", "burn_slow",
+                                        "breached")}
+                for obj, o in snap["objectives"].items()},
+        })
+    assert residual == 0.0, \
+        f"energy ledger does not reconcile: residual {residual!r}"
+
+    ledger = tele.ledger
+    bench = {
+        "requests": served,
+        "batches": ledger.batches,
+        "virtual_s": engine.clock_s,
+        "energy_per_request_j": ledger.energy_per_request_j(),
+        "ledger_residual_j": residual,
+        "total_j": sum(ledger.component_totals().values()),
+        "shares": ledger.shares(),
+        "shares_by_op": {op: ledger.shares(op) for op in ledger.ops()},
+        "slo_trace": slo_trace,
+    }
+    with open("BENCH_energy.json", "w", encoding="utf-8") as fh:
+        json.dump(bench, fh, indent=2, sort_keys=True)
+    print(json.dumps({k: v for k, v in bench.items()
+                      if k not in ("shares_by_op", "slo_trace")},
+                     indent=2, sort_keys=True))
+    for op in ledger.ops():
+        top = sorted(ledger.shares(op).items(), key=lambda kv: -kv[1])[:3]
+        print(f"  {op}: " + ", ".join(f"{c}={s:.1%}" for c, s in top))
+    print("wrote BENCH_energy.json")
+
+
+if __name__ == "__main__":
+    main()

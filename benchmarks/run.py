@@ -27,6 +27,7 @@ MODULES = [
     "ar_serving",
     "offload_overlap",
     "trace_forensics",
+    "energy_slo",
 ]
 
 

@@ -295,6 +295,14 @@ def _drive(args, engine, server, ops, priorities, deadlines):
         print(f"telemetry: {est.total_observations} latency observations "
               f"over {len(est)} configs; guardband floor "
               f"{engine.telemetry.controller.guard_index}")
+        ledger, slo = engine.telemetry.ledger, engine.telemetry.slo
+        if ledger is not None and ledger.batches:
+            top = sorted(ledger.shares().items(), key=lambda kv: -kv[1])[:3]
+            burning = slo.breached_objectives()
+            print(f"energy: {ledger.energy_per_request_j():.2f} J/request ("
+                  + ", ".join(f"{c} {s:.0%}" for c, s in top)
+                  + "); slo breached: "
+                  + (", ".join(burning) if burning else "none"))
     if engine.offload_store is not None:
         ost = engine.offload_store.stats
         print(f"offload: {ost.commits} commits, "

@@ -360,6 +360,17 @@ def _drive(args, eng, server, n_requests: int, bucket: int) -> list:
               f"observations over {len(tele.estimator)} configs; guardband "
               f"floor {ctrl.guard_index if ctrl else 0} "
               f"({ctrl.guard_op_name() if ctrl else 'n/a'})")
+        if tele.ledger is not None and tele.ledger.batches:
+            top = sorted(tele.ledger.shares().items(),
+                         key=lambda kv: -kv[1])[:3]
+            burning = tele.slo.breached_objectives()
+            print(f"  energy: {tele.ledger.energy_per_request_j():.2f} "
+                  f"J/request ("
+                  + ", ".join(f"{c} {s:.0%}" for c, s in top)
+                  + "); slo breached: "
+                  + (", ".join(burning) if burning else "none")
+                  + (f" -- GET {server.url}/slo" if server is not None
+                     else ""))
     if args.trace_dir is not None:
         from repro.serving.trace import write_chrome_trace
         os.makedirs(args.trace_dir, exist_ok=True)

@@ -21,7 +21,7 @@ overhead, the DSE sweeps -- is then model OUTPUT, not fit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core import dvfs as dvfs_lib
 from repro.core.rollback import DEFAULT_INTERVAL
@@ -48,6 +48,55 @@ class RunConfig:
     body_bits: int = 8
     recovery_tiles_per_step: float = 0.0  # from simulation stats
     repacked_layout: bool = True
+    # Model evals of ``num_steps`` that were rollback replays (AR window
+    # re-decodes). Replays run at the aggressive point like any resilient
+    # step, so this splits the ledger's aggressive-compute charge into a
+    # first-pass and a replay component without changing the total.
+    replay_evals: int = 0
+
+
+# The energy ledger: every joule run_cost prices lands in exactly one of
+# these components, and ``ledger_total`` (a fixed left-to-right sum in this
+# order) IS the canonical total -- ``energy_j`` and the legacy aggregate
+# keys (e_die/e_dram/e_static/e_drift_mem) are derived from the components,
+# never the other way around, so the ledger provably sums to the billed
+# total bit for bit (run_cost and per_request_cost alike).
+ENERGY_COMPONENTS = (
+    "compute_nominal",     # protected steps at (V0, f0), ABFT included
+    "compute_aggressive",  # resilient steps: V^2- and precision-scaled MACs
+    "compute_replay",      # rollback-replay model evals (AR re-decodes)
+    "dram_stream",         # weight/activation streaming per computed step
+    "ckpt_refresh",        # rollback-checkpoint refresh writes (offload)
+    "recovery",            # rollback recovery tile reads + row overhead
+    "static",              # leakage over the run's latency, ~V
+)
+
+
+def ledger_total(breakdown: Dict[str, float]) -> float:
+    """The canonical component sum: plain left-to-right addition in
+    ``ENERGY_COMPONENTS`` order. Float addition is non-associative, so
+    every place that turns a breakdown into a total MUST go through this
+    one association -- that is what makes ``sum(components) == energy_j``
+    an exact (bitwise) invariant rather than an approximate one."""
+    total = 0.0
+    for comp in ENERGY_COMPONENTS:
+        total += breakdown[comp]
+    return total
+
+
+def _derive_totals(breakdown: Dict[str, float]) -> Dict[str, float]:
+    """Aggregate keys recomputed from the (possibly scaled) components,
+    each with its own fixed association."""
+    return {
+        "energy_j": ledger_total(breakdown),
+        "e_die": (breakdown["compute_nominal"]
+                  + breakdown["compute_aggressive"]
+                  + breakdown["compute_replay"]),
+        "e_dram": (breakdown["dram_stream"] + breakdown["ckpt_refresh"]
+                   + breakdown["recovery"]),
+        "e_static": breakdown["static"],
+        "e_drift_mem": breakdown["ckpt_refresh"] + breakdown["recovery"],
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +149,15 @@ def activation_bytes(cfg: ModelConfig, batch: int = 1) -> float:
 
 def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
              em: EnergyModel = EnergyModel()) -> Dict[str, float]:
-    """Energy (J) and latency (s) for one generated sample batch."""
+    """Energy (J) and latency (s) for one generated sample batch.
+
+    Besides the aggregate keys, the result carries ``"breakdown"``: the
+    per-component energy ledger (``ENERGY_COMPONENTS``). The components
+    are the primary arithmetic -- ``energy_j`` is exactly
+    ``ledger_total(breakdown)``, so component sums reconcile with the
+    billed total bit for bit (tests/test_energy_slo.py asserts it across
+    the whole configuration matrix).
+    """
     hw = em.hw
     macs_step = model_eval_macs(cfg, batch)
     act_bytes = activation_bytes(cfg, batch)
@@ -129,15 +186,16 @@ def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
     e_die_nom = macs_step * e_mac * (1 + abft)
     e_die_agg = macs_step * e_mac * (1 + abft) \
         * (emb + (1 - emb) * vf2 * bscale_e)
-    e_die = n_nom * e_die_nom + n_agg * e_die_agg
+    # replay evals are resilient-step re-runs: same aggressive pricing,
+    # split out of the first-pass aggressive component for the ledger
+    n_rep = min(max(int(rc.replay_evals), 0), n_agg)
 
     # DRAM device energy + DRIFT overheads (ckpt writes 1/n + recovery reads)
     ckpt_bytes = (len(computed) / max(rc.ckpt_interval, 1)) * act_bytes
     tiles = rc.recovery_tiles_per_step * len(computed)
     rows = tiles * (1.0 if rc.repacked_layout else hw.array_dim)
     recov_bytes = tiles * hw.array_dim ** 2 * 4 + rows * 64  # + row overhead
-    e_dram = (len(computed) * dram_step + ckpt_bytes + recov_bytes) \
-        * em.e_dram_pj_per_byte * 1e-12
+    e_byte = em.e_dram_pj_per_byte * 1e-12
 
     # latency: compute-bound, DVFS frequency scaling; narrowed body
     # operands stream faster through the systolic array (~ bits/8)
@@ -145,28 +203,29 @@ def run_cost(cfg: ModelConfig, rc: RunConfig, batch: int = 1,
     f_ratio = hw.freq_ghz / rc.aggressive.freq_ghz
     t_agg = t_nom * (emb + (1 - emb) * f_ratio * bscale_t)
     latency = n_nom * t_nom + n_agg * t_agg
-    e_static = em.static_w * latency * (rc.aggressive.voltage / v0)
 
-    return {
-        "energy_j": e_die + e_dram + e_static,
+    breakdown = {
+        "compute_nominal": n_nom * e_die_nom,
+        "compute_aggressive": (n_agg - n_rep) * e_die_agg,
+        "compute_replay": n_rep * e_die_agg,
+        "dram_stream": len(computed) * dram_step * e_byte,
+        "ckpt_refresh": ckpt_bytes * e_byte,
+        "recovery": recov_bytes * e_byte,
+        "static": em.static_w * latency * (rc.aggressive.voltage / v0),
+    }
+    out = _derive_totals(breakdown)
+    out.update({
         "latency_s": latency,
-        "e_die": e_die,
-        "e_dram": e_dram,
-        "e_static": e_static,
-        "e_drift_mem": (ckpt_bytes + recov_bytes) * em.e_dram_pj_per_byte
-            * 1e-12,
         "abft_overhead": abft,
         "n_computed_steps": float(len(computed)),
-    }
-
-
-# Energy components that scale with (and are attributed to) request count;
-# latency is shared -- everything in a batch finishes together.
-_PER_REQUEST_KEYS = ("energy_j", "e_die", "e_dram", "e_static", "e_drift_mem")
+        "breakdown": breakdown,
+    })
+    return out
 
 
 def per_request_cost(cfg: ModelConfig, rc: RunConfig, batch: int,
-                     n_live: int, em: EnergyModel = EnergyModel()
+                     n_live: int, em: EnergyModel = EnergyModel(),
+                     cost: Optional[Dict[str, float]] = None
                      ) -> Dict[str, float]:
     """Attribute one batch-bucket run's cost evenly across its live requests.
 
@@ -174,13 +233,23 @@ def per_request_cost(cfg: ModelConfig, rc: RunConfig, batch: int,
     served by it. Padding slots burn real compute, so their energy lands on
     the live requests (the serving engine's bucketing overhead is visible in
     the per-request numbers instead of silently vanishing). Latency keys are
-    returned unscaled.
+    returned unscaled. Pass ``cost`` (a prior ``run_cost`` result for the
+    same configuration) to skip recomputing the model.
+
+    Each ledger component is scaled by the per-request share and every
+    energy aggregate -- ``energy_j`` included -- is re-derived from the
+    scaled components with the same association as ``run_cost``, so the
+    exact-sum invariant survives attribution: the per-request breakdown
+    sums bitwise to the per-request ``energy_j``.
     """
-    cost = run_cost(cfg, rc, batch=batch, em=em)
+    if cost is None:
+        cost = run_cost(cfg, rc, batch=batch, em=em)
     share = 1.0 / max(n_live, 1)
+    breakdown = {comp: cost["breakdown"][comp] * share
+                 for comp in ENERGY_COMPONENTS}
     out = dict(cost)
-    for k in _PER_REQUEST_KEYS:
-        out[k] = cost[k] * share
+    out.update(_derive_totals(breakdown))
+    out["breakdown"] = breakdown
     return out
 
 

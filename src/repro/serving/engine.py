@@ -90,6 +90,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import dvfs as dvfs_lib
+from repro.core import quant as quant_lib
 from repro.diffusion import sampler as sampler_lib
 from repro.perfmodel import energy
 from repro.serving.batcher import MicroBatch, MicroBatcher
@@ -216,6 +217,13 @@ class DriftServeEngine:
         self._planner: Optional[OffloadPlanner] = None
         self._interval_memo: Dict[Tuple, int] = {}
         self._stall_memo: Dict[Tuple, float] = {}
+        # Per-window energy attribution (docs/slo.md): a prospective
+        # per-computed-step estimate memoized per configuration, so
+        # window/replay trace spans can carry joules while the batch is
+        # still in flight (the exact ledger lands at finalize).
+        self._window_j_memo: Dict[Tuple, float] = {}
+        self._window_step_j = 0.0
+        self._window_prev_steps = 0
         # One ServableModel per paradigm (they're stateless adapters over
         # the engine; per-batch state rides _BatchCtx).
         self._servables: Dict[str, servable_lib.ServableModel] = {}
@@ -418,14 +426,56 @@ class DriftServeEngine:
         float_clean batches run storeless semantics)."""
         if self._offload_store is None or key.mode not in _MONITORED_MODES:
             return None
+        # Host refresh traffic is DRAM traffic in the paper's accounting:
+        # arm the store with the calibrated per-byte cost so its commit/
+        # restore trace events carry the joules they moved.
+        self._offload_store.energy_per_byte_j = \
+            self._energy_model_for().e_dram_pj_per_byte * 1e-12
         return self._offload_store
+
+    def window_energy_per_step_j(self, key: SamplerKey) -> float:
+        """Prospective per-computed-step energy for one batch of this
+        configuration: the perfmodel batch cost (recovery traffic unknown
+        mid-flight, charged zero) over its computed steps. Attached to
+        window/replay spans so /flight shows joules as a batch progresses;
+        the billed ledger (exact, including recovery) lands at finalize."""
+        memo = (key.arch, key.op, key.steps, key.mode, key.precision,
+                key.taylorseer, key.rollback_interval, key.bucket)
+        cached = self._window_j_memo.get(memo)
+        if cached is None:
+            op = OP_BY_NAME.get(key.op, dvfs_lib.NOMINAL)
+            protected = key.mode in _MONITORED_MODES
+            rc = energy.RunConfig(
+                num_steps=key.steps, nominal_steps=self.nominal_steps,
+                aggressive=op,
+                ckpt_interval=(key.rollback_interval if protected
+                               else 10 ** 9),
+                abft_enabled=protected,
+                taylorseer_interval=3 if key.taylorseer else 0,
+                body_bits=quant_lib.get_plan(key.precision).body_bits)
+            cost = energy.run_cost(self._full_cfg(key.arch), rc,
+                                   batch=key.bucket,
+                                   em=self._energy_model_for())
+            n = max(int(cost.get("n_computed_steps", key.steps)), 1)
+            cached = self._window_j_memo[memo] = cost["energy_j"] / n
+        return cached
+
+    def _window_energy_delta_j(self, done_steps: int) -> float:
+        """Joules attributed to the window that just completed: newly
+        finished steps (since the last window tap) times the batch's
+        per-step estimate. Single-threaded like the engine itself."""
+        delta = max(int(done_steps) - self._window_prev_steps, 0)
+        self._window_prev_steps = int(done_steps)
+        return delta * self._window_step_j
 
     def _on_stream_window(self, done_steps: int) -> None:
         """Combined window-boundary tap handed to ``make_sampler``: the
         telemetry stream counter plus a flight-recorder window span. Both
         are host-side Python between windows -- zero trace impact."""
         self.telemetry.on_stream_window(done_steps)
-        self.tracer.on_window(done_steps)
+        self.tracer.on_window(done_steps,
+                              energy_j=self._window_energy_delta_j(
+                                  done_steps))
 
     def _on_compile(self, key: SamplerKey, elapsed_s: float) -> None:
         """CompiledSamplerCache miss tap: a compile span with the factory's
@@ -496,6 +546,9 @@ class DriftServeEngine:
                                 op=key.op, steps=key.steps,
                                 bucket=key.bucket, n_live=len(mb.requests),
                                 n_pad=mb.n_pad)
+        # arm per-window energy attribution for this batch's spans
+        self._window_prev_steps = 0
+        self._window_step_j = self.window_energy_per_step_j(key)
         return _BatchCtx(batch_index=batch_index, params=params,
                          padded_seeds=padded_seeds, inputs=inputs,
                          run_key=run_key)
@@ -544,13 +597,17 @@ class DriftServeEngine:
         nevals = outcome.n_model_evals
 
         # perfmodel attribution: full-arch energy model, bucket cost split
-        # across the live requests (padding overhead lands on them).
+        # across the live requests (padding overhead lands on them). The
+        # batch is priced once (run_cost) and the per-request view shares
+        # that exact ledger, so batch and request breakdowns reconcile
+        # bitwise (serving.telemetry.energy.verify_cost).
         em = self._energy_model_for()
         full = self._full_cfg(key.arch)
         rc = outcome.rc
         n_live = len(mb.requests)
+        bcost = energy.run_cost(full, rc, batch=key.bucket, em=em)
         cost = energy.per_request_cost(full, rc, batch=key.bucket,
-                                       n_live=n_live, em=em)
+                                       n_live=n_live, em=em, cost=bcost)
         base = energy.per_request_cost(full, energy.baseline_rc(key.steps),
                                        batch=key.bucket, n_live=n_live,
                                        em=em)
@@ -583,6 +640,7 @@ class DriftServeEngine:
                 batch_corrected_elems=corrected,
                 n_model_evals=nevals,
                 energy_j=cost["energy_j"],
+                energy_breakdown=cost["breakdown"],
                 latency_s=batch_latency_s,
                 baseline_energy_j=base["energy_j"],
                 baseline_latency_s=base["latency_s"],
@@ -608,7 +666,8 @@ class DriftServeEngine:
             corrected=corrected,
             n_words=outcome.n_words,
             monitored=protected, clock_s=self.clock_s,
-            queue_depth=len(self.queue), results=results)
+            queue_depth=len(self.queue), results=results,
+            energy_breakdown=bcost["breakdown"])
         if ctx.offload_delta is not None:
             # settled by the drain's finish_batch() join before this ran
             self.telemetry.on_offload(ctx.offload_delta,
@@ -627,6 +686,7 @@ class DriftServeEngine:
         self.tracer.finish_batch(self.clock_s, detect_attrs=detect_attrs,
                                  latency_s=batch_latency_s,
                                  energy_j=cost["energy_j"],
+                                 energy_breakdown=dict(bcost["breakdown"]),
                                  stall_s=stall_s, mode=key.mode,
                                  op=key.op or "nominal",
                                  n_model_evals=nevals)

@@ -123,6 +123,10 @@ class OffloadStore:
         # background thread -- the recorder is lock-protected) and each
         # restore. None = no tracing.
         self.on_event: Optional[Callable] = None
+        # Modeled joules per offloaded byte (the perfmodel's DRAM access
+        # energy): the engine arms it when it binds the store, so commit/
+        # restore events carry the energy their refresh traffic costs.
+        self.energy_per_byte_j = 0.0
 
     # ------------------------------------------------------------ binding
     def begin_batch(self, interval: int, batch_index: int) -> None:
@@ -205,6 +209,7 @@ class OffloadStore:
             if self.on_event is not None:
                 self.on_event("commit", step,
                               time.perf_counter() - t0, nbytes=nbytes,
+                              energy_j=nbytes * self.energy_per_byte_j,
                               asynchronous=self.cfg.async_commit)
 
         if not self.cfg.async_commit:
@@ -261,8 +266,10 @@ class OffloadStore:
         with self._lock:
             self.stats.restores += 1
         t0 = time.perf_counter()
+        nbytes = layout_lib.store_nbytes(front)
         out = layout_lib.unpack_store(front)
         if self.on_event is not None:
             self.on_event("restore", front_step,
-                          time.perf_counter() - t0)
+                          time.perf_counter() - t0, nbytes=nbytes,
+                          energy_j=nbytes * self.energy_per_byte_j)
         return out

@@ -211,6 +211,11 @@ class RequestResult:
     # (unmonitored modes, stub samplers in tests).
     detect_heatmap: Optional[tuple] = None
     detect_heatmap_blocks: Optional[tuple] = None
+    # --- energy ledger (docs/slo.md): this request's share of the batch
+    # cost, split over perfmodel.energy.ENERGY_COMPONENTS. The fixed-order
+    # component sum equals ``energy_j`` bitwise (ledger_total); None only
+    # from metric-only fakes in tests -- the engine always fills it.
+    energy_breakdown: Optional[dict] = None
 
 
 class RequestQueue:

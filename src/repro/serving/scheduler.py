@@ -277,6 +277,13 @@ class DeadlineScheduler:
         if adm.projected_energy_j is not None:
             attrs["projected_energy_j"] = adm.projected_energy_j
             attrs["quality"] = adm.quality
+        # SLO context at decision time (docs/slo.md): which objectives
+        # were burning when this admission was taken, so a post-hoc audit
+        # can tell "admitted into a healthy fleet" from "admitted while
+        # the energy budget was already breached".
+        slo = getattr(eng.telemetry, "slo", None)
+        if slo is not None and slo.any_breached:
+            attrs["slo_breached"] = list(slo.breached_objectives())
         if self._frontier_audit is not None:
             if adm.action == "frontier":
                 attrs.update(self._frontier_audit)

@@ -444,10 +444,24 @@ class AutoregressiveServable(ServableModel):
         fns = eng.cache.get(mb.key, self.build_fn)
         (tokens,) = ctx.inputs
         tracer = getattr(eng, "tracer", None)
+        if tracer is None:
+            return ar.decode_batch(fns, ctx.params, tokens, eng.monitor,
+                                   ctx.run_key)
+
+        # Window/replay spans carry joules (docs/slo.md): decoded tokens
+        # use the engine's per-step estimate for the window just finished,
+        # replays charge their re-decoded window length at the same rate.
+        def on_window(done_steps: int) -> None:
+            tracer.on_window(done_steps,
+                             energy_j=eng._window_energy_delta_j(done_steps))
+
+        def on_replay(window_start: int, window_len: int) -> None:
+            tracer.on_replay(window_start, window_len,
+                             energy_j=window_len * eng._window_step_j)
+
         return ar.decode_batch(
             fns, ctx.params, tokens, eng.monitor, ctx.run_key,
-            on_window=None if tracer is None else tracer.on_window,
-            on_replay=None if tracer is None else tracer.on_replay)
+            on_window=on_window, on_replay=on_replay)
 
     def execute_stream(self, mb, ctx, preview_interval: int) -> Iterator:
         raise ValueError(
@@ -494,7 +508,10 @@ class AutoregressiveServable(ServableModel):
         op_point = OP_BY_NAME.get(key.op, dvfs_lib.NOMINAL)
         protected = key.mode in _MONITORED_MODES
         # Rollback replays are real decode steps: charge them in the
-        # perfmodel run shape (per-token cost x computed steps).
+        # perfmodel run shape (per-token cost x computed steps), and tell
+        # the ledger which evals were replays -- evals = 1 prefill +
+        # key.steps first-pass decodes + window re-decodes, so everything
+        # past the first two terms bills as compute_replay.
         rc = energy.RunConfig(
             num_steps=int(out.n_model_evals),
             nominal_steps=self.eng.nominal_steps,
@@ -502,7 +519,8 @@ class AutoregressiveServable(ServableModel):
             ckpt_interval=key.rollback_interval if protected else 10 ** 9,
             abft_enabled=protected,
             taylorseer_interval=0,
-            recovery_tiles_per_step=0.0)
+            recovery_tiles_per_step=0.0,
+            replay_evals=max(int(out.n_model_evals) - 1 - key.steps, 0))
         per_slot = []
         for slot, req in enumerate(mb.requests):
             mismatch = float(np.mean(toks[slot] != clean[slot]))

@@ -44,11 +44,14 @@ from typing import Optional
 from repro.serving.telemetry.controller import (GuardbandConfig,
                                                 GuardbandController,
                                                 GuardbandStats)
+from repro.serving.telemetry.energy import (ENERGY_COMPONENTS, EnergyLedger,
+                                            verify_cost)
 from repro.serving.telemetry.history import (BatchObservation,
                                              LatencyEstimator, LatencyKey)
 from repro.serving.telemetry.metrics import (Counter, Gauge, Histogram,
                                              MetricsRegistry,
                                              merge_labeled_expositions)
+from repro.serving.telemetry.slo import OBJECTIVES, SLOConfig, SLOTracker
 from repro.version import __version__ as _build_version
 
 __all__ = [
@@ -57,8 +60,16 @@ __all__ = [
     "merge_labeled_expositions",
     "LatencyEstimator", "BatchObservation", "LatencyKey",
     "GuardbandController", "GuardbandConfig", "GuardbandStats",
+    "EnergyLedger", "ENERGY_COMPONENTS", "verify_cost",
+    "SLOTracker", "SLOConfig", "OBJECTIVES",
     "TelemetryHTTPServer", "serve_telemetry", "aggregate_metrics",
 ]
+
+# Buckets for the per-request energy histogram: smoke archs bill
+# millijoules, full DiT-XL-512 samples land around 4-6 J, and fleets
+# budget tens of joules -- log-spaced to cover all three regimes.
+REQUEST_ENERGY_BUCKETS_J = (0.001, 0.003, 0.01, 0.03, 0.1, 0.3,
+                            1.0, 3.0, 10.0, 30.0, 100.0)
 
 
 class EngineTelemetry:
@@ -78,7 +89,8 @@ class EngineTelemetry:
                  estimator: Optional[LatencyEstimator] = None,
                  controller: Optional[GuardbandController] = None,
                  guardband: bool = True,
-                 guardband_config: Optional[GuardbandConfig] = None) -> None:
+                 guardband_config: Optional[GuardbandConfig] = None,
+                 slo_config: Optional[SLOConfig] = None) -> None:
         self.enabled = enabled
         self.registry = registry if registry is not None else \
             MetricsRegistry()
@@ -87,6 +99,11 @@ class EngineTelemetry:
         self.controller = controller
         self._want_guardband = guardband and enabled
         self._guardband_config = guardband_config
+        self._slo_config = slo_config
+        # Energy ledger + SLO tracker, built at bind() (the tracker needs
+        # the engine's target BER). None while disabled/unbound.
+        self.ledger: Optional[EnergyLedger] = None
+        self.slo: Optional[SLOTracker] = None
         self._bound = False
 
     @classmethod
@@ -214,6 +231,36 @@ class EngineTelemetry:
             "Wall seconds since this engine's telemetry was bound")
         self._t0_wall = time.monotonic()
         self._m_uptime.set(0.0)
+        # energy ledger + SLO engine (docs/slo.md)
+        self.ledger = EnergyLedger()
+        self.slo = SLOTracker(target_ber, self._slo_config)
+        self._slo_prev_breached = dict(self.slo.breached)
+        self._m_energy = r.counter(
+            "drift_energy_joules_total",
+            "Billed joules by ledger component and operating point "
+            "(component sums reconcile bitwise with billed energy_j)",
+            label_names=("component", "op"))
+        self._m_req_energy = r.histogram(
+            "drift_request_energy_joules",
+            "Billed energy per completed request (its share of the "
+            "batch ledger)", buckets=REQUEST_ENERGY_BUCKETS_J)
+        self._m_burn = r.gauge(
+            "drift_slo_burn_rate",
+            "Observed/target burn rate per SLO objective and window "
+            "(virtual-clock windows; breach = both windows above the "
+            "threshold)", label_names=("objective", "window"))
+        self._m_slo_breaches = r.gauge(
+            "drift_slo_breached",
+            "1 while an SLO objective's fast AND slow windows both burn "
+            "above threshold, else 0", label_names=("objective",))
+        self._m_slo_breach_edges = r.counter(
+            "drift_slo_breaches_total",
+            "Breach onsets per SLO objective (ok->breached transitions)",
+            label_names=("objective",))
+        self._m_skew = r.gauge(
+            "drift_clock_skew_ratio",
+            "Virtual clock seconds per wall uptime second: how fast "
+            "modeled-accelerator time runs relative to this host")
         return self
 
     # -------------------------------------------------------------- hooks
@@ -226,9 +273,13 @@ class EngineTelemetry:
     def on_batch(self, key, n_live: int, n_pad: int, latency_s: float,
                  ema_ber: float, op_index: int, corrected: int,
                  n_words: int, monitored: bool, clock_s: float,
-                 queue_depth: int, results) -> None:
-        """One served micro-batch: metrics, history, and -- for monitored
-        modes -- one guardband-controller observation."""
+                 queue_depth: int, results,
+                 energy_breakdown=None) -> None:
+        """One served micro-batch: metrics, history, energy ledger, SLO
+        evaluation, and -- for monitored modes -- one guardband-controller
+        observation. ``energy_breakdown`` is the BATCH-level component
+        dict from ``perfmodel.energy.run_cost`` (each result additionally
+        carries its own per-request share)."""
         if not self.enabled:
             return
         op_name = key.op or "nominal"
@@ -241,11 +292,37 @@ class EngineTelemetry:
         self._m_ema.set(ema_ber)
         self._m_ladder.set(op_index)
         self._m_corrected.inc(corrected)
-        self._m_uptime.set(time.monotonic() - self._t0_wall)
+        # One shared wall sample for uptime AND clock skew, so the two
+        # gauges reconcile exactly: skew == clock_gauge / uptime_gauge
+        # (tests/test_telemetry.py pins this on the fake-device engine).
+        wall = time.monotonic() - self._t0_wall
+        self._m_uptime.set(wall)
+        self._m_skew.set(clock_s / wall if wall > 0 else 0.0)
+        if energy_breakdown is not None:
+            self.ledger.charge_batch(op_name, energy_breakdown)
+            for comp in ENERGY_COMPONENTS:
+                j = energy_breakdown[comp]
+                if j:
+                    self._m_energy.labels(component=comp, op=op_name).inc(j)
         for res in results:
             self._m_queue_wait.observe(res.queue_wait_s)
             if res.deadline_missed:
                 self._m_misses.inc()
+            self.ledger.charge_request(res.energy_j)
+            self._m_req_energy.observe(res.energy_j)
+        # SLO engine: fold the batch in on the virtual clock, publish burn
+        # rates, edge-count breach onsets, and hand the energy objective's
+        # breach state to the guardband (its "run cheaper" floor input).
+        self.slo.observe_batch(clock_s, ema_ber, monitored, results)
+        for (obj, win), rate in self.slo.burn_rates().items():
+            self._m_burn.labels(objective=obj, window=win).set(rate)
+        for obj, breached in self.slo.breached.items():
+            self._m_slo_breaches.labels(objective=obj).set(float(breached))
+            if breached and not self._slo_prev_breached[obj]:
+                self._m_slo_breach_edges.labels(objective=obj).inc()
+        self._slo_prev_breached = dict(self.slo.breached)
+        if self.controller is not None:
+            self.controller.set_energy_slo_breach(self.slo.energy_breached)
         self.estimator.observe(BatchObservation(
             arch=key.arch, op=op_name, steps=key.steps, bucket=key.bucket,
             latency_s=latency_s, clock_s=clock_s,
@@ -336,6 +413,13 @@ class EngineTelemetry:
             self._m_frontier_size.set(frontier_size)
 
     # ------------------------------------------------------------ queries
+    def slo_snapshot(self) -> Optional[dict]:
+        """The ``GET /slo`` body (docs/slo.md), or None while telemetry is
+        disabled/unbound."""
+        if not self.enabled or self.slo is None:
+            return None
+        return self.slo.snapshot()
+
     def clamp_ladder_index(self, op_index: int) -> int:
         """Apply the guardband floor (identity when disabled/absent)."""
         if self.enabled and self.controller is not None:

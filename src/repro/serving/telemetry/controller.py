@@ -98,6 +98,11 @@ class GuardbandController:
         self.rollback_rate = 0.0
         self._window_sum = 0.0
         self._window_n = 0
+        # Energy-SLO breach input (telemetry's SLOTracker sets it each
+        # batch): while the fleet burns its energy budget, "auto" is
+        # pinned to the guardband floor itself -- the cheapest operating
+        # point the reliability state machine currently allows.
+        self.energy_slo_breached = False
 
     # ----------------------------------------------------------- observe
     def observe_batch(self, ema_ber: float, op_name: str,
@@ -146,9 +151,20 @@ class GuardbandController:
         st.last_action = HOLD
         return st.last_action
 
+    def set_energy_slo_breach(self, breached: bool) -> None:
+        """Energy-SLO floor input (docs/slo.md): telemetry calls this
+        after every batch with the tracker's energy-objective breach
+        state; it only affects ``op="auto"`` resolution via clamp()."""
+        self.energy_slo_breached = bool(breached)
+
     # ------------------------------------------------------------- apply
     def clamp(self, op_index: int) -> int:
-        """Apply the guardband floor to a monitor ladder index."""
+        """Apply the guardband floor to a monitor ladder index. Under an
+        energy-SLO breach the floor becomes the *ceiling* too: "auto"
+        resolves to exactly the guardband index -- as aggressive (cheap)
+        as the reliability guardband permits, no higher."""
+        if self.energy_slo_breached:
+            return self.guard_index
         return max(int(op_index), self.guard_index)
 
     def guard_op_name(self) -> str:

@@ -21,6 +21,12 @@ Endpoints:
     format (``text/plain; version=0.0.4``). With telemetry disabled the
     payload is a single comment line, still 200.
 
+``GET /slo``
+    The SLO engine's snapshot as JSON (docs/slo.md): per objective the
+    target, fast/slow virtual-clock window values, burn rates, and
+    breach state. Deterministic on the virtual clock; multi-engine
+    servers add a per-engine map like ``/healthz``.
+
 ``GET /events?interval=K``
     Server-Sent Events: drains the engine's queue through
     ``run_stream(K)`` (default: the server's ``preview_interval``) and
@@ -220,6 +226,8 @@ class TelemetryHTTPServer:
             return self._healthz(h)
         if parsed.path == "/metrics":
             return self._metrics(h)
+        if parsed.path == "/slo":
+            return self._slo(h)
         if parsed.path == "/events":
             return self._events(h, parse_qs(parsed.query))
         if parsed.path == "/flight":
@@ -275,6 +283,23 @@ class TelemetryHTTPServer:
             return
         self._respond(h, 200, tele.registry.CONTENT_TYPE,
                       tele.registry.expose())
+
+    @staticmethod
+    def _slo_snapshot(eng):
+        tele = getattr(eng, "telemetry", None)
+        snap = tele.slo_snapshot() if tele is not None else None
+        return snap if snap is not None else {"slo": "disabled"}
+
+    def _slo(self, h) -> None:
+        """``GET /slo``: the engine's SLO tracker snapshot (objectives,
+        targets, fast/slow window values, burn rates, breach state) on
+        the deterministic virtual clock -- wire format in docs/slo.md.
+        Multi-engine servers report a per-engine map like /healthz."""
+        body = self._slo_snapshot(self.engine)
+        if self.engines:
+            body["engines"] = {name: self._slo_snapshot(e)
+                               for name, e in self.engines.items()}
+        self._respond(h, 200, "application/json", json.dumps(body))
 
     def _flight(self, h) -> None:
         """The whole ring buffer as Chrome trace JSON (lock-free read:

@@ -1,0 +1,387 @@
+"""Energy-ledger + SLO-engine + trajectory-gate tests (the observatory).
+
+Covers the PR 10 acceptance bar:
+
+* **ledger exactness** -- for every priced cost the stack can produce
+  (``run_cost`` and ``per_request_cost`` across archs, operating points,
+  precision plans, ABFT on/off, TaylorSeer, replay evals, checkpoint
+  intervals) the fixed-order component sum equals ``energy_j``
+  **bitwise**, and the same invariant holds on real engine results
+  (``RequestResult.energy_breakdown``) across ops x precision x
+  offload on/off, diffusion and autoregressive (the 8-fake-device twin
+  lives in test_serving_sharded.py);
+* **SLO determinism** -- the tracker's burn rates are exact functions of
+  the virtual clock (unit-pinned values; two identical engines produce
+  identical ``/slo`` snapshots over the wire);
+* **closing the loop** -- an energy-objective breach pins ``op="auto"``
+  to the guardband floor, breaches edge-count into
+  ``drift_slo_breaches_total``;
+* **trajectory gate** -- tools/bench_history.py ingest/check mechanics:
+  direction-aware tolerances, the zero-tolerance ledger residual, the
+  fresh-history auto-pass, rolling retention, and ``--inject``.
+"""
+import importlib.util
+import itertools
+import json
+import types
+import urllib.request
+from pathlib import Path
+
+import pytest
+
+from repro import configs
+from repro.core import dvfs
+from repro.perfmodel import energy
+from repro.serving import (DriftServeEngine, EngineTelemetry, OffloadConfig,
+                           serve_telemetry)
+from repro.serving.telemetry import (ENERGY_COMPONENTS, GuardbandController,
+                                     OBJECTIVES, SLOConfig, SLOTracker,
+                                     verify_cost)
+from repro.serving.telemetry.energy import EnergyLedger, ledger_total
+
+ARCH = "dit-xl-512"
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _load_bench_history():
+    spec = importlib.util.spec_from_file_location(
+        "bench_history", REPO / "tools" / "bench_history.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------- perfmodel ledger
+def test_run_cost_ledger_exact_over_config_matrix():
+    """The tentpole invariant at the source: every configuration the
+    perfmodel can price reconciles component sum == energy_j bitwise."""
+    em = energy.calibrate()
+    checked = 0
+    for arch, op, abft, ts, bits, interval in itertools.product(
+            ("dit-xl-512", "sd15-unet", "olmo-1b"),
+            (dvfs.NOMINAL, dvfs.UNDERVOLT, dvfs.OVERCLOCK),
+            (True, False), (0, 3), (8, 4), (4, 10 ** 9)):
+        cfg = configs.get_config(arch)
+        rc = energy.RunConfig(num_steps=12, nominal_steps=2, aggressive=op,
+                              abft_enabled=abft, taylorseer_interval=ts,
+                              body_bits=bits, ckpt_interval=interval,
+                              recovery_tiles_per_step=0.5)
+        for batch in (1, 4):
+            cost = energy.run_cost(cfg, rc, batch=batch, em=em)
+            assert verify_cost(cost) == 0.0
+            # aggregates are derived from the components, same association
+            b = cost["breakdown"]
+            assert cost["e_die"] == (b["compute_nominal"]
+                                     + b["compute_aggressive"]
+                                     + b["compute_replay"])
+            assert cost["e_drift_mem"] == b["ckpt_refresh"] + b["recovery"]
+            # attribution keeps the invariant for every live-count
+            for n_live in (1, 2, batch):
+                req = energy.per_request_cost(cfg, rc, batch=batch,
+                                              n_live=n_live, em=em,
+                                              cost=cost)
+                assert verify_cost(req) == 0.0
+                assert req["latency_s"] == cost["latency_s"]  # unscaled
+            checked += 1
+    assert checked == 3 * 3 * 2 * 2 * 2 * 2 * 2   # configs x batch sizes
+
+
+def test_replay_evals_split_conserves_total():
+    """Splitting aggressive compute into first-pass + replay relabels
+    joules, it does not mint them; replay counts clamp to the resilient
+    step count."""
+    cfg = configs.get_config("olmo-1b")
+    base = dict(num_steps=8, nominal_steps=1, aggressive=dvfs.UNDERVOLT)
+    plain = energy.run_cost(cfg, energy.RunConfig(**base))
+    for evals in (1, 3, 10 ** 6):
+        split = energy.run_cost(
+            cfg, energy.RunConfig(replay_evals=evals, **base))
+        assert verify_cost(split) == 0.0
+        assert split["energy_j"] == pytest.approx(plain["energy_j"])
+        assert (split["breakdown"]["compute_aggressive"]
+                + split["breakdown"]["compute_replay"]) == pytest.approx(
+                    plain["breakdown"]["compute_aggressive"])
+        if evals >= 7:      # n_agg = 7 here: the clamp
+            assert split["breakdown"]["compute_aggressive"] == 0.0
+    assert plain["breakdown"]["compute_replay"] == 0.0
+
+
+def test_negative_replay_evals_charge_nothing():
+    cfg = configs.get_config("olmo-1b")
+    cost = energy.run_cost(cfg, energy.RunConfig(num_steps=4,
+                                                 replay_evals=-3))
+    assert cost["breakdown"]["compute_replay"] == 0.0
+    assert verify_cost(cost) == 0.0
+
+
+# --------------------------------------------------------- engine ledger
+def _drain_and_verify(eng, n=2, **fields):
+    for seed in range(n):
+        eng.submit(seed=seed, **fields)
+    results = eng.run()
+    assert results
+    for res in results:
+        assert res.energy_breakdown is not None
+        assert set(res.energy_breakdown) == set(ENERGY_COMPONENTS)
+        assert ledger_total(res.energy_breakdown) == res.energy_j  # bitwise
+    return results
+
+
+@pytest.mark.parametrize("op", ["undervolt", "overclock"])
+@pytest.mark.parametrize("offload", [False, True])
+def test_engine_results_ledger_exact(op, offload):
+    """Engine-billed requests reconcile bitwise, offload store included
+    (its commits charge the same ckpt bytes the perfmodel prices)."""
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=2,
+                           offload=OffloadConfig() if offload else None)
+    results = _drain_and_verify(eng, steps=4, mode="drift", op=op)
+    comp = results[0].energy_breakdown
+    assert comp["compute_aggressive"] > 0 and comp["static"] > 0
+    assert comp["ckpt_refresh"] > 0        # drift mode refreshes ckpts
+    ledger = eng.telemetry.ledger
+    assert ledger.batches == eng.stats.batches
+    assert ledger.ops() == (op,)
+    assert ledger.requests == len(results)
+    # the fleet counter series carry the same joules the ledger holds
+    text = eng.telemetry.registry.expose()
+    assert f'drift_energy_joules_total{{component="static",op="{op}"}}' \
+        in text
+
+
+def test_engine_precision_plan_ledger_exact():
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=1)
+    _drain_and_verify(eng, n=1, steps=4, mode="drift", op="undervolt",
+                      precision="int8-body4")
+
+
+def test_ar_engine_ledger_exact_with_replay_component():
+    """Autoregressive serving bills replays into compute_replay and still
+    reconciles bitwise."""
+    eng = DriftServeEngine(arch="olmo-1b", smoke=True, bucket=1)
+    results = _drain_and_verify(eng, n=1, steps=6, mode="stat_abft",
+                                op="undervolt")
+    res = results[0]
+    # evals = prefill + steps + replays; any replay evals must have been
+    # billed to the replay component
+    replays = res.n_model_evals - 1 - res.steps
+    if replays > 0:
+        assert res.energy_breakdown["compute_replay"] > 0.0
+
+
+def test_energy_ledger_accumulator_queries():
+    led = EnergyLedger()
+    led.charge_batch("undervolt", {c: 0.0 for c in ENERGY_COMPONENTS}
+                     | {"compute_aggressive": 3.0, "static": 1.0})
+    led.charge_batch("nominal", {c: 0.0 for c in ENERGY_COMPONENTS}
+                     | {"compute_nominal": 4.0})
+    led.charge_request(2.0)
+    led.charge_request(4.0)
+    assert led.ops() == ("nominal", "undervolt")
+    assert led.component_totals()["compute_aggressive"] == 3.0
+    assert led.component_totals("nominal")["compute_nominal"] == 4.0
+    assert led.shares("undervolt")["compute_aggressive"] == 0.75
+    assert sum(led.shares().values()) == pytest.approx(1.0)
+    assert led.energy_per_request_j() == 3.0
+    assert EnergyLedger().shares() == {c: 0.0 for c in ENERGY_COMPONENTS}
+    assert EnergyLedger().energy_per_request_j() == 0.0
+
+
+# ------------------------------------------------------------ SLO engine
+def _req(clock_s=0.0, deadline=None, missed=False, energy_j=1.0, wait=0.0):
+    return types.SimpleNamespace(deadline_s=deadline, deadline_missed=missed,
+                                 energy_j=energy_j, queue_wait_s=wait)
+
+
+def test_slo_tracker_pins_exact_burn_rates():
+    cfg = SLOConfig(energy_per_request_j=2.0, queue_wait_p99_s=0.5,
+                    deadline_miss_rate=0.25, fast_window_s=1.0,
+                    slow_window_s=10.0)
+    t = SLOTracker(target_ber=1e-3, config=cfg)
+    t.observe_batch(0.1, ema_ber=2e-3, monitored=True, results=[
+        _req(deadline=0.05, missed=True, energy_j=4.0, wait=0.2),
+        _req(deadline=None, energy_j=4.0, wait=0.1)])
+    burns = t.burn_rates()
+    # energy: mean 4.0 vs target 2.0 -> burn 2.0, both windows
+    assert burns[("energy_per_request_j", "fast")] == 2.0
+    assert burns[("energy_per_request_j", "slow")] == 2.0
+    # deadline: 1 miss of 1 deadline-carrying request vs target 0.25
+    assert burns[("deadline_miss_rate", "fast")] == 1.0 / 0.25
+    # ber: window mean 2e-3 vs target 1e-3
+    assert burns[("ber_detection_rate", "slow")] == 2.0
+    # p99 queue wait (nearest rank over [0.1, 0.2]) vs 0.5
+    assert burns[("queue_wait_p99_s", "fast")] == 0.2 / 0.5
+    assert t.breached["energy_per_request_j"]
+    assert t.energy_breached and t.any_breached
+    assert "energy_per_request_j" in t.breached_objectives()
+
+
+def test_slo_windows_evict_on_virtual_clock():
+    cfg = SLOConfig(energy_per_request_j=2.0, fast_window_s=1.0,
+                    slow_window_s=5.0)
+    t = SLOTracker(target_ber=1e-3, config=cfg)
+    t.observe_batch(0.0, 0.0, False, [_req(energy_j=8.0)])
+    assert t.breached["energy_per_request_j"]
+    # 2 virtual seconds later the spike left the fast window: slow still
+    # burns but the multiwindow guard clears the breach
+    t.observe_batch(2.0, 0.0, False, [_req(energy_j=1.0)])
+    assert t.value("energy_per_request_j", cfg.fast_window_s) == 1.0
+    assert t.value("energy_per_request_j", cfg.slow_window_s) == 4.5
+    assert not t.breached["energy_per_request_j"]
+    # past the slow horizon the spike is evicted entirely
+    t.observe_batch(8.0, 0.0, False, [_req(energy_j=1.0)])
+    assert t.value("energy_per_request_j", cfg.slow_window_s) == 1.0
+    snap = t.snapshot()
+    assert snap["batches"] == 3 and snap["clock_s"] == 8.0
+    assert set(snap["objectives"]) == set(OBJECTIVES)
+
+
+def test_slo_unknown_objective_raises():
+    t = SLOTracker(target_ber=1e-3)
+    with pytest.raises(KeyError):
+        t.target("nope")
+    with pytest.raises(KeyError):
+        t.value("nope", 1.0)
+
+
+def test_slo_snapshot_deterministic_across_engines_and_http():
+    """Two identical engines serve the same stream: byte-identical /slo
+    bodies (virtual-clock evaluation has no machine dependence)."""
+    snaps = []
+    for _ in range(2):
+        eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=2)
+        for seed in range(4):
+            eng.submit(steps=3, mode="drift",
+                       op="undervolt" if seed < 2 else "overclock",
+                       seed=seed)
+        eng.run()
+        with serve_telemetry(eng, port=0) as server:
+            body = urllib.request.urlopen(f"{server.url}/slo").read()
+        snaps.append(body)
+        assert json.loads(body) == json.loads(
+            json.dumps(eng.telemetry.slo_snapshot()))
+    assert snaps[0] == snaps[1]
+
+
+def test_slo_disabled_telemetry_over_http():
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=1,
+                           telemetry=EngineTelemetry(enabled=False))
+    eng.submit(steps=2, mode="drift", op="undervolt", seed=0)
+    eng.run()
+    with serve_telemetry(eng, port=0) as server:
+        body = json.load(urllib.request.urlopen(f"{server.url}/slo"))
+    assert body == {"slo": "disabled"}
+
+
+# ------------------------------------------------- closing the loop
+def test_energy_breach_pins_clamp_to_guardband_floor():
+    ctrl = GuardbandController(target_ber=1e-3)
+    ctrl.guard_index = 1
+    assert ctrl.clamp(0) == 1          # floor
+    assert ctrl.clamp(3) == 3          # ladder above floor wins
+    ctrl.set_energy_slo_breach(True)
+    assert ctrl.clamp(3) == 1          # breach: floor is the ceiling too
+    assert ctrl.clamp(0) == 1
+    ctrl.set_energy_slo_breach(False)
+    assert ctrl.clamp(3) == 3
+
+
+def test_energy_breach_feeds_controller_and_edge_counts():
+    """A hopeless energy target breaches on the first batch: the engine's
+    controller learns it, "auto" resolves to the floor, and the breach
+    counter counts the onset exactly once across repeated burning
+    batches."""
+    tele = EngineTelemetry(
+        slo_config=SLOConfig(energy_per_request_j=1e-12))
+    eng = DriftServeEngine(arch=ARCH, smoke=True, bucket=1, telemetry=tele)
+    eng.submit(steps=2, mode="drift", op="undervolt", seed=0)
+    eng.run()
+    assert tele.slo.energy_breached
+    assert tele.controller.energy_slo_breached
+    assert eng.auto_op_index() == tele.controller.guard_index
+    edge = tele.registry.counter("drift_slo_breaches_total").labels(
+        objective="energy_per_request_j")
+    assert edge.value == 1.0
+    eng.submit(steps=2, mode="drift", op="undervolt", seed=1)
+    eng.run()
+    assert edge.value == 1.0           # still burning: no new onset
+    gauge = tele.registry.gauge("drift_slo_breached").labels(
+        objective="energy_per_request_j")
+    assert gauge.value == 1.0
+
+
+# ------------------------------------------------------- trajectory gate
+@pytest.fixture()
+def bh():
+    return _load_bench_history()
+
+
+def test_bench_history_flatten_scalars_only(bh):
+    out = {}
+    bh._flatten("t", {"a": 1, "b": {"c": 2.5, "flag": True},
+                      "s": "text", "l": [1, 2]}, out)
+    assert out == {"t.a": 1.0, "t.b.c": 2.5}
+    assert bh._tag("/x/BENCH_serving.json") == "serving"
+
+
+def test_bench_history_ingest_and_rolling_retention(bh, tmp_path):
+    (tmp_path / "BENCH_serving.json").write_text(
+        json.dumps({"throughput_req_per_virtual_s": 20.0}))
+    hist = tmp_path / "BENCH_history.json"
+    for i in range(5):
+        bh.ingest(str(tmp_path), str(hist), sha=f"sha{i}", keep=3)
+    entries = bh.load_history(str(hist))
+    assert [e["sha"] for e in entries] == ["sha2", "sha3", "sha4"]
+    assert entries[-1]["metrics"] == {
+        "serving.throughput_req_per_virtual_s": 20.0}
+
+
+def test_bench_history_regression_directions(bh):
+    base = [{"sha": "b", "metrics": {
+        "serving.throughput_req_per_virtual_s": 20.0,
+        "serving.queue_wait_p99_s": 0.4,
+        "energy.energy_per_request_j": 1.0,
+        "energy.ledger_residual_j": 0.0}} for _ in range(3)]
+
+    def bad_metrics(**kw):
+        m = dict(base[0]["metrics"])
+        m.update(kw)
+        return {r["metric"] for r in
+                bh.regressions(base, {"sha": "c", "metrics": m})}
+
+    assert bad_metrics() == set()
+    # inside tolerance in the bad direction: no flag
+    assert bad_metrics(**{
+        "serving.throughput_req_per_virtual_s": 18.5}) == set()
+    # beyond tolerance, bad direction
+    assert bad_metrics(**{"serving.throughput_req_per_virtual_s": 15.0}) \
+        == {"serving.throughput_req_per_virtual_s"}
+    assert bad_metrics(**{"energy.energy_per_request_j": 1.2}) \
+        == {"energy.energy_per_request_j"}
+    # the good direction never flags, however large the move
+    assert bad_metrics(**{
+        "serving.throughput_req_per_virtual_s": 400.0,
+        "energy.energy_per_request_j": 0.01}) == set()
+    # zero-tolerance residual: any leak is a regression
+    assert bad_metrics(**{"energy.ledger_residual_j": 1e-9}) \
+        == {"energy.ledger_residual_j"}
+    # metrics missing on either side are skipped, not flagged
+    assert bh.regressions(base, {"sha": "c", "metrics": {}}) == []
+
+
+def test_bench_history_check_min_baseline_and_inject(bh, tmp_path, capsys):
+    (tmp_path / "BENCH_serving.json").write_text(
+        json.dumps({"throughput_req_per_virtual_s": 20.0}))
+    hist = str(tmp_path / "BENCH_history.json")
+    # empty history and fresh (no-baseline) history both auto-pass
+    assert bh.check(hist, 5, 1, {}) == 0
+    bh.ingest(str(tmp_path), hist, sha="a")
+    assert bh.check(hist, 5, 1, {}) == 0
+    bh.ingest(str(tmp_path), hist, sha="b")
+    assert bh.check(hist, 5, 1, {}) == 0
+    # the gate fires on an injected throughput drop
+    assert bh.check(hist, 5, 1,
+                    {"serving.throughput_req_per_virtual_s": 0.5}) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    with pytest.raises(SystemExit):
+        bh.check(hist, 5, 1, {"not.a.metric": 0.5})
+    assert bh.self_test() == 0

@@ -238,3 +238,19 @@ def test_empty_history_admission_bit_identical_on_mesh():
     with_telemetry = plans(None)                       # default: enabled
     without = plans(EngineTelemetry(enabled=False))
     assert with_telemetry == without   # frozen dataclasses, exact floats
+
+
+@needs_mesh
+def test_energy_ledger_exact_on_mesh(reference, sharded_dp):
+    """The ledger invariant survives sharding: every request billed by
+    either engine reconciles component sum == energy_j bitwise, and the
+    two engines bill identical breakdowns (same perfmodel, same bucket)."""
+    from repro.serving.telemetry.energy import ledger_total
+    _, ref, _ = reference
+    _, shr, _ = sharded_dp
+    for results in (ref, shr):
+        for r in results:
+            assert r.energy_breakdown is not None
+            assert ledger_total(r.energy_breakdown) == r.energy_j
+    for a, b in zip(ref, shr):
+        assert a.energy_breakdown == b.energy_breakdown

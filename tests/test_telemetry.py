@@ -546,3 +546,24 @@ def test_serve_cli_builds_disabled_telemetry_engine():
     assert not eng.telemetry.enabled
     args = serve_cli.build_parser().parse_args(["--batch", "1"])
     assert serve_cli.build_engine(args).telemetry.enabled
+
+
+# --------------------------------------------------------- clock skew
+def test_clock_skew_gauge_reconciles_with_uptime_and_clock():
+    """drift_clock_skew_ratio is computed from ONE shared wall sample
+    with the uptime gauge, so the three gauges reconcile exactly:
+    skew == clock / uptime, bitwise -- not merely approximately."""
+    eng = make_engine(bucket=2)
+    for seed in range(4):
+        eng.submit(steps=6, mode="drift", op="undervolt", seed=seed)
+    eng.run()
+    reg = eng.telemetry.registry
+    clock = reg.gauge("drift_clock_seconds").value
+    uptime = reg.gauge("drift_engine_uptime_seconds").value
+    skew = reg.gauge("drift_clock_skew_ratio").value
+    assert clock == eng.clock_s > 0
+    assert uptime > 0
+    assert skew == clock / uptime
+    # fake-device engines bill virtual seconds far faster than the wall
+    # spends them, so the ratio is strictly positive
+    assert skew > 0

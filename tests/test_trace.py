@@ -183,6 +183,66 @@ def test_bit_identity_tracing_on_off_one_shot_and_streamed():
     assert all(sum(row[: n_bins // 2]) == 0 for row in heat)
 
 
+def test_heatmap_engine_level_with_fewer_steps_than_bins():
+    """A served request with steps < N_STEP_BINS degrades to one bin per
+    step (no empty phantom bins), and the detect span's heatmap stays the
+    result's heatmap."""
+    from repro.serving.trace import N_STEP_BINS
+    steps = N_STEP_BINS - 1
+    eng = _engine()
+    eng.submit(steps=steps, mode="drift", op="undervolt", seed=0)
+    (res,) = _drain(eng)
+    heat = res.detect_heatmap
+    assert heat is not None
+    assert all(len(row) == steps for row in heat)
+    # the protected head (nominal_steps = 2) maps to the first two
+    # per-step bins exactly -- no detections there by construction
+    assert all(row[0] == row[1] == 0 for row in heat)
+    (detect,) = [s for s in eng.tracer.spans() if s.kind == "detect"]
+    assert detect.attrs["heatmap"] == heat
+
+
+def test_recorder_offload_thread_racing_batch_lifecycle():
+    """The offload store's background thread records commits while the
+    engine thread opens/closes batches: with capacity headroom, nothing
+    drops, every span lands exactly once, and batch-lifecycle spans stay
+    one-per-batch."""
+    n_batches, n_commits = 100, 400
+    rec = FlightRecorder(capacity=8192)
+    start = threading.Event()
+
+    def offloader():
+        start.wait()
+        for i in range(n_commits):
+            rec.on_offload("commit", i, 0.0, nbytes=64)
+
+    t = threading.Thread(target=offloader)
+    t.start()
+    start.set()
+    for b in range(n_batches):
+        rec.begin_batch(b, [b], float(b))
+        rec.on_window(2)
+        rec.finish_batch(float(b) + 0.5)
+    t.join()
+    # queue_wait + batch_assembly + window + finalize per batch + commits
+    assert rec.recorded == 4 * n_batches + n_commits
+    assert rec.dropped == 0 and len(rec) == rec.recorded
+    spans = rec.spans()
+    by_kind = kind_counts(rec)
+    assert by_kind == {"queue_wait": n_batches,
+                       "batch_assembly": n_batches,
+                       "window": n_batches,
+                       "finalize": n_batches,
+                       "offload_commit": n_commits}
+    # no duplicated or lost commits: every step recorded exactly once
+    commit_steps = sorted(s.attrs["step"] for s in spans
+                          if s.kind == "offload_commit")
+    assert commit_steps == list(range(n_commits))
+    # batch-lifecycle spans are unique per batch index
+    finals = [s.batch_index for s in spans if s.kind == "finalize"]
+    assert sorted(finals) == list(range(n_batches))
+
+
 def test_streamed_offloaded_span_coverage_with_decision_record():
     """Acceptance: a streamed, monitored, offload-enabled request's trace
     has spans for every window and commit plus the decision record."""

@@ -1,0 +1,290 @@
+#!/usr/bin/env python
+"""Benchmark trajectory gate: BENCH_*.json -> rolling history -> regression
+check.
+
+The telemetry-smoke CI job has been emitting per-SHA ``BENCH_*.json``
+artifacts since PR 7, but nothing ever *compared* them -- a change could
+halve serving throughput or double billed energy and CI would stay green.
+This tool closes the loop:
+
+``ingest``
+    Flatten every ``BENCH_*.json`` in a directory into dotted scalar
+    metrics (``serving.throughput_req_per_virtual_s``, ...) and append
+    one ``{sha, metrics}`` entry to a rolling ``BENCH_history.json``
+    (bounded to ``--keep`` entries, oldest dropped).
+
+``check``
+    Compare the newest entry against the mean of the previous
+    ``--baseline-window`` entries, metric by metric, using the
+    direction-aware tolerances declared in ``TOLERANCES`` below. A
+    tracked metric moving beyond its tolerance in the *bad* direction is
+    a regression: the tool prints a delta table and exits 1. Fewer than
+    ``--min-baseline`` prior entries (e.g. a fresh history) is a pass --
+    a gate with no baseline has nothing to gate. ``--inject
+    metric=factor`` multiplies the candidate's metric before comparing:
+    the CI job uses it to prove the gate actually fails (acceptance:
+    "demonstrably fails on an injected regression").
+
+``self-test``
+    Synthesizes a history, verifies the gate passes on a flat trajectory
+    and fails on an injected regression, exits accordingly. Cheap enough
+    to run on every CI invocation as the gate's own canary.
+
+Untracked numeric metrics ride along in the history (future PRs can
+promote them to tracked) but never gate. Only scalars are kept --
+nested benchmark detail like per-config estimator tables stays in the
+per-SHA artifacts.
+
+Usage (what .github/workflows/ci.yml runs)::
+
+    python tools/bench_history.py ingest --sha $GITHUB_SHA
+    python tools/bench_history.py check
+    python tools/bench_history.py check --inject \
+        serving.throughput_req_per_virtual_s=0.5   # expected to exit 1
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+HISTORY_DEFAULT = "BENCH_history.json"
+KEEP_DEFAULT = 50
+
+# Tracked metrics: dotted path -> (good direction, relative tolerance).
+# "higher" = bigger is better (regression when the candidate falls more
+# than tol below the baseline mean); "lower" = smaller is better
+# (regression when it rises more than tol above). Tolerances are loose on
+# purpose: CI runners are shared machines, so only virtual-clock and
+# modeled-energy numbers get tight gates; wall-clock metrics are recorded
+# but untracked.
+TOLERANCES: Dict[str, Tuple[str, float]] = {
+    # serving trajectory (benchmarks/serving_telemetry.py)
+    "serving.throughput_req_per_virtual_s": ("higher", 0.10),
+    "serving.queue_wait_p99_s": ("lower", 0.25),
+    "serving.estimator.mean_rel_error_vs_perfmodel": ("lower", 0.50),
+    "serving.deadline_misses": ("lower", 0.0),
+    # energy ledger + SLO trajectory (benchmarks/energy_slo.py)
+    "energy.energy_per_request_j": ("lower", 0.10),
+    "energy.ledger_residual_j": ("lower", 0.0),   # must stay exactly 0
+    # offload overlap (benchmarks/offload_overlap.py)
+    "offload.stall_fraction_async": ("lower", 0.25),
+    # AR serving (benchmarks/ar_serving.py)
+    "ar.throughput_tok_per_virtual_s": ("higher", 0.10),
+}
+
+
+# ------------------------------------------------------------------ flatten
+def _flatten(prefix: str, node, out: Dict[str, float]) -> None:
+    if isinstance(node, bool):        # bool is an int subclass; skip flags
+        return
+    if isinstance(node, (int, float)):
+        out[prefix] = float(node)
+        return
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    # strings / lists: benchmark detail, not trajectory scalars
+
+
+def _tag(path: str) -> str:
+    """BENCH_serving.json -> 'serving'."""
+    name = os.path.basename(path)
+    tag = name[len("BENCH_"):] if name.startswith("BENCH_") else name
+    return tag[:-len(".json")] if tag.endswith(".json") else tag
+
+
+def collect_metrics(bench_dir: str) -> Dict[str, float]:
+    """Flattened scalar metrics from every BENCH_*.json in ``bench_dir``
+    (the history file itself excluded), keys prefixed by file tag."""
+    out: Dict[str, float] = {}
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        if os.path.basename(path) == HISTORY_DEFAULT:
+            continue
+        with open(path, encoding="utf-8") as fh:
+            _flatten(_tag(path), json.load(fh), out)
+    return out
+
+
+# ------------------------------------------------------------------ history
+def load_history(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    entries = data.get("entries", [])
+    assert isinstance(entries, list), f"malformed history {path}"
+    return entries
+
+
+def save_history(path: str, entries: List[dict]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"schema": 1, "entries": entries}, fh, indent=2,
+                  sort_keys=True)
+        fh.write("\n")
+
+
+def ingest(bench_dir: str, history_path: str, sha: str,
+           keep: int = KEEP_DEFAULT) -> dict:
+    metrics = collect_metrics(bench_dir)
+    if not metrics:
+        raise SystemExit(f"no BENCH_*.json found in {bench_dir!r}; "
+                         "run the benchmarks first")
+    entries = load_history(history_path)
+    entry = {"sha": sha, "metrics": metrics}
+    entries.append(entry)
+    save_history(history_path, entries[-keep:])
+    return entry
+
+
+# -------------------------------------------------------------------- check
+def regressions(baseline: List[dict], candidate: dict,
+                tolerances: Dict[str, Tuple[str, float]] = None
+                ) -> List[dict]:
+    """Tracked metrics where the candidate moved beyond tolerance in the
+    bad direction vs the baseline-window mean. Metrics absent from either
+    side are skipped (a new benchmark has no baseline; a removed one has
+    no candidate -- neither is a perf regression)."""
+    tolerances = TOLERANCES if tolerances is None else tolerances
+    cand = candidate["metrics"]
+    out = []
+    for metric, (direction, tol) in sorted(tolerances.items()):
+        base_vals = [e["metrics"][metric] for e in baseline
+                     if metric in e["metrics"]]
+        if not base_vals or metric not in cand:
+            continue
+        base = sum(base_vals) / len(base_vals)
+        val = cand[metric]
+        if direction == "higher":
+            bound = base * (1.0 - tol)
+            bad = val < bound - 1e-12
+        else:
+            bound = base * (1.0 + tol) if base != 0 else tol
+            bad = val > bound + 1e-12
+        if bad:
+            out.append({"metric": metric, "direction": direction,
+                        "tolerance": tol, "baseline": base,
+                        "candidate": val, "bound": bound})
+    return out
+
+
+def check(history_path: str, baseline_window: int, min_baseline: int,
+          inject: Dict[str, float]) -> int:
+    entries = load_history(history_path)
+    if not entries:
+        print(f"bench-history: {history_path} is empty -- nothing to gate")
+        return 0
+    candidate = dict(entries[-1])
+    candidate["metrics"] = dict(candidate["metrics"])
+    for metric, factor in inject.items():
+        if metric not in candidate["metrics"]:
+            raise SystemExit(f"--inject: metric {metric!r} not in the "
+                             "candidate entry")
+        candidate["metrics"][metric] *= factor
+        print(f"bench-history: injected {metric} x{factor:g} "
+              f"-> {candidate['metrics'][metric]:.6g}")
+    baseline = entries[:-1][-baseline_window:]
+    if len(baseline) < min_baseline:
+        print(f"bench-history: {len(baseline)} baseline entries "
+              f"(< {min_baseline}) -- pass (no baseline to gate against)")
+        return 0
+    bad = regressions(baseline, candidate)
+    n_tracked = sum(1 for m in TOLERANCES
+                    if m in candidate["metrics"]
+                    and any(m in e["metrics"] for e in baseline))
+    print(f"bench-history: candidate {candidate.get('sha', '?')[:12]} vs "
+          f"mean of {len(baseline)} entries, {n_tracked} tracked metrics")
+    for r in bad:
+        arrow = "fell below" if r["direction"] == "higher" else "rose above"
+        print(f"  REGRESSION {r['metric']}: {r['candidate']:.6g} {arrow} "
+              f"{r['bound']:.6g} (baseline {r['baseline']:.6g}, "
+              f"tol {r['tolerance']:.0%})")
+    if bad:
+        return 1
+    print("bench-history: no tolerance-exceeding regressions")
+    return 0
+
+
+# ---------------------------------------------------------------- self-test
+def self_test() -> int:
+    """The gate's canary: a flat synthetic trajectory must pass, an
+    injected 2x-worse candidate must fail. Exercises the same
+    ``regressions`` core the CI check runs."""
+    flat = {"serving.throughput_req_per_virtual_s": 20.0,
+            "energy.energy_per_request_j": 0.2,
+            "energy.ledger_residual_j": 0.0}
+    baseline = [{"sha": f"base{i}", "metrics": dict(flat)} for i in range(5)]
+    ok = regressions(baseline, {"sha": "cand", "metrics": dict(flat)})
+    assert ok == [], f"flat trajectory flagged: {ok}"
+    worse = dict(flat)
+    worse["serving.throughput_req_per_virtual_s"] *= 0.5     # -50% >> 10%
+    worse["energy.energy_per_request_j"] *= 2.0              # +100% >> 10%
+    bad = regressions(baseline, {"sha": "cand", "metrics": worse})
+    got = {r["metric"] for r in bad}
+    assert got == {"serving.throughput_req_per_virtual_s",
+                   "energy.energy_per_request_j"}, got
+    # zero-tolerance metric: ANY nonzero residual is a regression
+    leak = dict(flat)
+    leak["energy.ledger_residual_j"] = 1e-9
+    bad = regressions(baseline, {"sha": "cand", "metrics": leak})
+    assert any(r["metric"] == "energy.ledger_residual_j" for r in bad), bad
+    print("bench-history self-test: pass on flat, fail on injected -- ok")
+    return 0
+
+
+# ---------------------------------------------------------------------- cli
+def _parse_inject(specs: List[str]) -> Dict[str, float]:
+    out = {}
+    for spec in specs:
+        metric, _, factor = spec.partition("=")
+        if not factor:
+            raise SystemExit(f"--inject wants metric=factor, got {spec!r}")
+        out[metric] = float(factor)
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Rolling BENCH_*.json trajectory + regression gate")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_in = sub.add_parser("ingest", help="fold BENCH_*.json into history")
+    p_in.add_argument("--sha", required=True,
+                      help="commit SHA to stamp the entry with")
+    p_in.add_argument("--dir", default=".",
+                      help="directory holding BENCH_*.json (default: .)")
+    p_in.add_argument("--history", default=HISTORY_DEFAULT)
+    p_in.add_argument("--keep", type=int, default=KEEP_DEFAULT,
+                      help=f"rolling entry cap (default {KEEP_DEFAULT})")
+
+    p_ck = sub.add_parser("check", help="gate the newest entry")
+    p_ck.add_argument("--history", default=HISTORY_DEFAULT)
+    p_ck.add_argument("--baseline-window", type=int, default=5,
+                      help="prior entries averaged as baseline (default 5)")
+    p_ck.add_argument("--min-baseline", type=int, default=1,
+                      help="prior entries required to gate at all "
+                           "(default 1; fewer = automatic pass)")
+    p_ck.add_argument("--inject", action="append", default=[],
+                      metavar="METRIC=FACTOR",
+                      help="multiply a candidate metric before comparing "
+                           "(CI uses it to prove the gate fires)")
+
+    sub.add_parser("self-test", help="verify the gate logic itself")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "ingest":
+        entry = ingest(args.dir, args.history, args.sha, args.keep)
+        print(f"bench-history: ingested {len(entry['metrics'])} metrics "
+              f"for {args.sha[:12]} into {args.history}")
+        return 0
+    if args.cmd == "check":
+        return check(args.history, args.baseline_window, args.min_baseline,
+                     _parse_inject(args.inject))
+    return self_test()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
